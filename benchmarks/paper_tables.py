@@ -1,0 +1,189 @@
+"""One benchmark per paper table/figure.  Each returns (rows, derived) where
+rows are printable dicts and derived is a short claim-check string."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core import dse, encoding
+from repro.core import netlist as nl
+from repro.core.generator import LUTCoreConfig, generate
+
+
+def fig5_submodule_breakdown():
+    """Fig. 5: area/power breakdown of 32×32 FP16 across group sizes."""
+    rows = []
+    for mu in (1, 2, 3, 4, 5):
+        b = cm.breakdown(mu, 32, 32, "fp16")
+        pwr = cm.power_proxy_breakdown(mu, 32, 32, "fp16")
+        rows.append({"mu": mu, **{k: round(v, 1) for k, v in b.items()},
+                     "power_proxy": round(pwr["total"], 1)})
+    areas = {r["mu"]: r["total"] for r in rows}
+    pwrs = {r["mu"]: r["power_proxy"] for r in rows}
+    derived = (f"argmin_area_mu={min(areas, key=areas.get)} (paper 3); "
+               f"argmin_power_mu={min(pwrs, key=pwrs.get)} (paper 3)")
+    return rows, derived
+
+
+def fig6_model_validation():
+    """Fig. 6: analytical model vs 'synthesis' across the Table III grid.
+
+    Without EDA tools the synthesis stand-in is the exact constructive
+    netlist ('exact' mode — real unit counts from the generated DAG); the
+    paper's curve-fit model must track it closely across all design points.
+    """
+    rows, ratios = [], {"fp16": [], "int8": []}
+    for dt in ("int8", "fp16"):
+        for t in (8, 32, 64, 96):
+            for mu in (1, 2, 3, 4, 5):
+                if t % mu:
+                    continue
+                a_fit = cm.lut_core_area_mm2(mu, t, t, dt, mode="paper")
+                a_exact = cm.lut_core_area_mm2(mu, t, t, dt, mode="exact")
+                rows.append({"dtype": dt, "tile": t, "mu": mu,
+                             "model_mm2": round(a_fit, 5),
+                             "exact_netlist_mm2": round(a_exact, 5)})
+                ratios[dt].append(a_fit / a_exact)
+    r_all = np.asarray(ratios["fp16"] + ratios["int8"])
+    derived = (f"model/exact ratio mean={r_all.mean():.3f} "
+               f"max_dev={np.abs(r_all - 1).max():.3f} "
+               f"(model tracks the generated netlist)")
+    return rows, derived
+
+
+def table4_baseline_comparison():
+    """Table IV: 32×32 FP16 — dequant / sign-flip / LUT areas."""
+    c = cm.get_coeffs("fp16")
+    lut = cm.area_gates_lut(3, 32, 32, c)
+    deq = cm.area_gates_dequant_baseline(32, 32, c)
+    sf = cm.area_gates_signflip_baseline(32, 32, c)
+    rows = [
+        {"design": "full-width multiplication baseline",
+         "area_mm2": round(cm.area_mm2(deq, c), 4),
+         "relative": round(deq / lut, 3), "paper": 2.23},
+        {"design": "sign-flip multiplication baseline",
+         "area_mm2": round(cm.area_mm2(sf, c), 4),
+         "relative": round(sf / lut, 3), "paper": 1.64},
+        {"design": "this work (optimal mu=3)",
+         "area_mm2": round(cm.area_mm2(lut, c), 4),
+         "relative": 1.0, "paper": 1.0},
+    ]
+    derived = (f"dequant={deq/lut:.3f}x (paper 2.23x), "
+               f"signflip={sf/lut:.3f}x (paper 1.64x), "
+               f"abs={cm.area_mm2(lut, c):.4f}mm2 (paper 0.120)")
+    return rows, derived
+
+
+def fig7_tile_scaling():
+    """Fig. 7: area efficiency vs square tile size (FP16, optimal mu).
+
+    Uses the paper's tile grid (8, 32, 64, 96).  Off-grid sizes whose side is
+    not divisible by mu=3 (64, 128) show a local dip from the forced
+    suboptimal group size — a generator constraint worth knowing about, noted
+    in EXPERIMENTS.md.
+    """
+    rows = []
+    for t in (8, 32, 64, 96):
+        mus = [m for m in (1, 2, 3, 4, 5) if t % m == 0]
+        mu = min(mus, key=lambda m: cm.area_gates_lut(m, t, t, cm.get_coeffs("fp16")))
+        rows.append({"tile": t, "mu_opt": mu,
+                     "area_mm2": round(cm.lut_core_area_mm2(mu, t, t, "fp16"), 4),
+                     "tops_per_mm2": round(cm.tops_per_mm2(mu, t, t, "fp16"), 2)})
+    effs = [r["tops_per_mm2"] for r in rows]
+    derived = ("monotone=" + str(all(b >= a for a, b in zip(effs, effs[1:]))) +
+               f" ({effs[0]} -> {effs[-1]} TOPS/mm2, paper grid 8/32/64/96)")
+    return rows, derived
+
+
+def fig8_tile_geometry():
+    """Fig. 8: non-square tiles at fixed throughput, both dtypes.
+
+    The dtype-dependent asymmetry is checked on mirrored aspect pairs
+    (n×m vs m×n): FP16 must prefer wide (K > L·mu), INT8 tall (L·mu > K).
+    """
+    rows, verdicts = [], []
+    for dt in ("fp16", "int8"):
+        recs = dse.geometry_sweep(1024, dt)
+        best = max(recs, key=lambda r: r["delta_vs_square"])
+        rows += [{"dtype": dt, **{k: (round(v, 4) if isinstance(v, float) else v)
+                                  for k, v in r.items()}}
+                 for r in recs if r["n"] in (8, 16, 32, 64, 128) or r is best]
+        by_nm = {(r["n"], r["m"]): r["area_mm2"] for r in recs}
+        tall = by_nm.get((64, 16))   # L·mu > K direction
+        wide = by_nm.get((16, 64))   # K > L·mu direction
+        pref = "L*mu>K" if (tall is not None and wide is not None and tall < wide) \
+            else "K>L*mu"
+        verdicts.append(f"{dt}: best {best['n']}x{best['m']} mu={best['mu']} "
+                        f"Δ={best['delta_vs_square']*100:.1f}%; mirrored-pair "
+                        f"preference {pref}")
+    derived = "; ".join(verdicts) + "  (paper: FP16 K>L*mu, INT8 L*mu>K)"
+    return rows, derived
+
+
+def table5_sota_comparison():
+    """Table V: reconfigure published designs at matched throughput."""
+    rows = []
+    for r in dse.sota_comparison():
+        rows.append({k: (round(v, 4) if isinstance(v, float) else v)
+                     for k, v in r.items()})
+    by = {r["work"]: r for r in rows}
+    derived = (f"tenet model prediction={by['tenet']['model_prediction']:.3f}x "
+               f"(paper 1.004x); tellme_v2={by['tellme_v2']['model_prediction']:.3f}x "
+               f"(paper 1.22x in FPGA LUTs); "
+               f"tenet published-area decrease={by['tenet'].get('area_decrease_vs_published', 0):.1f}x "
+               f"(paper 7.9x)")
+    return rows, derived
+
+
+def table1_encoding_density():
+    """§III-D: encoding density vs information-theoretic limit."""
+    rows = []
+    for mu in (1, 2, 3, 4, 5):
+        rows.append({"mu": mu, "key_bits": encoding.key_bits(mu),
+                     "paper_bits": encoding.key_bits_paper(mu),
+                     "bits_per_weight": round(encoding.bits_per_weight(mu), 4)})
+    derived = (f"mu=5: {encoding.bits_per_weight(5):.3f} b/w "
+               f"(paper 1.6; limit {np.log2(3):.3f}); vs 2-bit saving "
+               f"{(2 - encoding.bits_per_weight(5)) / 2 * 100:.0f}% (paper 20%)")
+    return rows, derived
+
+
+def eq2_adder_reduction():
+    """§III-B: adder-count optimizations (Eq. 2-4 + constructive DAG)."""
+    rows = []
+    for mu in (2, 3, 4, 5):
+        rows.append({"mu": mu, "naive": nl.naive_adders(mu),
+                     "symmetry": nl.symmetry_adders(mu),
+                     "eq2_bound": nl.bound_adders(mu),
+                     "constructive": nl.constructive_adders(mu),
+                     "reduction_pct": round(nl.adder_reduction_vs_naive(mu) * 100, 2)})
+    derived = (f"mu=4 reduction={nl.adder_reduction_vs_naive(4)*100:.2f}% "
+               f"(paper 81.89%); constructive DAG beats Eq.2 bound for mu>=4")
+    return rows, derived
+
+
+def generator_frontier():
+    """Beyond-paper: efficiency frontier emitted by the generator."""
+    rows = []
+    for dt in ("fp16", "int8"):
+        for rec in dse.frontier(dt):
+            rows.append({"dtype": dt, **rec,
+                         "area_mm2": round(rec["area_mm2"], 4),
+                         "tops_per_mm2": round(rec["tops_per_mm2"], 2)})
+    d = generate(LUTCoreConfig(mu=3, L=32, K=32, act_dtype="fp16"))
+    derived = f"example core: {d.tops_per_mm2:.1f} TOPS/mm2 @ {d.area_mm2:.4f} mm2"
+    return rows, derived
+
+
+ALL = {
+    "table1_encoding_density": table1_encoding_density,
+    "eq2_adder_reduction": eq2_adder_reduction,
+    "fig5_submodule_breakdown": fig5_submodule_breakdown,
+    "fig6_model_validation": fig6_model_validation,
+    "table4_baseline_comparison": table4_baseline_comparison,
+    "fig7_tile_scaling": fig7_tile_scaling,
+    "fig8_tile_geometry": fig8_tile_geometry,
+    "table5_sota_comparison": table5_sota_comparison,
+    "generator_frontier": generator_frontier,
+}

@@ -1,0 +1,25 @@
+"""Design-space exploration walkthrough — the paper's §VI/§VII story.
+
+Sweeps the (mu, L, K, dtype) space with the calibrated cost model, prints the
+per-submodule breakdown (Fig. 5), the baseline comparison (Table IV), tile
+scaling (Fig. 7), geometry (Fig. 8) and the SOTA reconfiguration (Table V).
+
+Run:  PYTHONPATH=src python examples/dse_explore.py
+"""
+
+from benchmarks.paper_tables import ALL
+
+
+def main():
+    for name, fn in ALL.items():
+        rows, derived = fn()
+        print(f"\n=== {name} ===")
+        print(f"  {derived}")
+        for r in rows[:12]:
+            print("   ", ", ".join(f"{k}={v}" for k, v in r.items()))
+        if len(rows) > 12:
+            print(f"    ... ({len(rows) - 12} more rows)")
+
+
+if __name__ == "__main__":
+    main()

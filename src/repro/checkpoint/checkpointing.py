@@ -1,0 +1,160 @@
+"""Sharded, atomic, resumable checkpointing (no external deps).
+
+Layout:
+  <dir>/step_000123/
+      manifest.json        — step, leaf index, shapes/dtypes, checksums
+      shard_00000.npz      — flattened leaves (split across shard files)
+      _COMMITTED           — written last; restore ignores dirs without it
+
+Fault-tolerance properties:
+  * atomic: the step directory is staged as ``.tmp-step_X`` and renamed after
+    the commit marker is written — a killed writer never corrupts state;
+  * validated:每 leaf crc32 recorded and checked on restore;
+  * elastic: leaves are stored logically (full arrays, host-gathered); a
+    restart may use a different mesh/process count — shardings are re-applied
+    by the caller (``launch/train.py``) via device_put;
+  * async: ``save_async`` hands the host copy to a worker thread so the train
+    loop overlaps the disk write (one in flight at a time).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_MARKER = "_COMMITTED"
+_worker: threading.Thread | None = None
+
+# npz cannot represent ml_dtypes (bfloat16, fp8); store them as same-width
+# uint views and restore via the manifest's dtype string.
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def _to_savable(a: np.ndarray) -> np.ndarray:
+    if a.dtype.name in _VIEW_AS:
+        return a.view(_VIEW_AS[a.dtype.name])
+    return a
+
+
+def _from_saved(a: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _VIEW_AS:
+        return a.view(getattr(ml_dtypes, dtype_name))
+    return a
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, step: int, tree: Any, max_shard_bytes: int = 1 << 30) -> str:
+    """Blocking save.  Returns the committed directory."""
+    leaves, _ = _flatten(tree)
+    arrs = [np.asarray(x) for x in leaves]
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = os.path.join(path, f".tmp-step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    manifest = {"step": step, "leaves": [], "shards": []}
+    shard, shard_bytes, shard_id = {}, 0, 0
+
+    def flush():
+        nonlocal shard, shard_bytes, shard_id
+        if not shard:
+            return
+        fname = f"shard_{shard_id:05d}.npz"
+        np.savez(os.path.join(tmp, fname), **shard)
+        manifest["shards"].append(fname)
+        shard, shard_bytes, shard_id = {}, 0, shard_id + 1
+
+    for i, a in enumerate(arrs):
+        key = f"leaf_{i:06d}"
+        manifest["leaves"].append({
+            "key": key, "shard": shard_id, "shape": list(a.shape),
+            "dtype": a.dtype.name, "crc32": zlib.crc32(a.tobytes()),
+        })
+        shard[key] = _to_savable(a)
+        shard_bytes += a.nbytes
+        if shard_bytes >= max_shard_bytes:
+            flush()
+    flush()
+
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, _MARKER), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def save_async(path: str, step: int, tree: Any) -> None:
+    """Overlapped save: host-copy now, disk write on a worker thread."""
+    global _worker
+    wait()
+    arrs = jax.tree.map(lambda x: np.asarray(x), tree)  # host copy (sync point)
+    _worker = threading.Thread(target=save, args=(path, step, arrs), daemon=True)
+    _worker.start()
+
+
+def wait() -> None:
+    global _worker
+    if _worker is not None:
+        _worker.join()
+        _worker = None
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = []
+    for d in os.listdir(path):
+        if d.startswith("step_") and \
+                os.path.exists(os.path.join(path, d, _MARKER)):
+            steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: int, like: Any, *, validate: bool = True) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  Resharding is the caller's job (device_put with the
+    current mesh's shardings) — this is what makes restarts elastic."""
+    d = os.path.join(path, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(d, _MARKER)):
+        raise FileNotFoundError(f"no committed checkpoint at {d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    shards = {}
+    for fname in manifest["shards"]:
+        shards.update(np.load(os.path.join(d, fname)))
+    leaves, treedef = _flatten(like)
+    out = []
+    for i, (spec, meta) in enumerate(zip(leaves, manifest["leaves"])):
+        a = _from_saved(shards[meta["key"]], meta["dtype"])
+        if validate and zlib.crc32(a.tobytes()) != meta["crc32"]:
+            raise IOError(f"checksum mismatch for {meta['key']} in {d}")
+        if list(a.shape) != list(spec.shape):
+            raise ValueError(f"shape mismatch {a.shape} vs {spec.shape} "
+                             f"(leaf {i}) — elastic reshape not supported for "
+                             f"param leaves")
+        out.append(a)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_latest(path: str, like: Any):
+    s = latest_step(path)
+    if s is None:
+        return None, None
+    return s, restore(path, s, like)

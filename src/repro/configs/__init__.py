@@ -1,0 +1,2 @@
+"""Architecture configs: one module per assigned architecture + the
+paper-native BitNet config.  See registry.py for lookup + input specs."""

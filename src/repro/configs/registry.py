@@ -1,0 +1,113 @@
+"""Architecture registry + per-(arch × shape) input specs.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input of a
+dry-run cell — weak-type-correct, shardable, no device allocation (the same
+pattern the dry-run harness lowers against).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    bitnet_2b,
+    gemma_7b,
+    internvl2_2b,
+    llama4_maverick_400b,
+    phi3p5_moe,
+    qwen2p5_14b,
+    qwen3_0p6b,
+    whisper_large_v3,
+    xlstm_125m,
+    yi_34b,
+    zamba2_2p7b,
+)
+from repro.configs.shapes import SHAPES, Shape, cells_for
+from repro.models.config import ModelConfig, reduced
+
+_MODULES = [internvl2_2b, zamba2_2p7b, yi_34b, gemma_7b, qwen2p5_14b,
+            qwen3_0p6b, llama4_maverick_400b, phi3p5_moe, whisper_large_v3,
+            xlstm_125m, bitnet_2b]
+
+ARCHS: dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+#: the ten assigned architectures (bitnet-b1.58-2b is the paper-native extra)
+ASSIGNED = [n for n in ARCHS if n != "bitnet-b1.58-2b"]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_smoke_config(name: str, **overrides) -> ModelConfig:
+    return reduced(get_config(name), **overrides)
+
+
+def shape_adapted_config(cfg: ModelConfig, shape: Shape) -> ModelConfig:
+    """Per-shape config adjustments (documented in DESIGN.md §5):
+    zamba2's shared attention gets a 4096 sliding window at 500k context
+    (the sub-quadratic adaptation for hybrid archs)."""
+    if shape.name == "long_500k" and cfg.block_pattern == "zamba2":
+        return cfg.with_(window=4096)
+    return cfg
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+        "loss_mask": _sds((B, S), jnp.float32),
+    }
+    if cfg.frontend == "audio_stub":
+        specs["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "vit_stub":
+        specs["vision_embeds"] = _sds((B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    specs = train_input_specs(cfg, shape)
+    specs.pop("labels")
+    specs.pop("loss_mask")
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    """Inputs for serve_step: one new token against a seq_len cache."""
+    from repro.models.decode import init_cache
+
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    specs = {
+        "tokens": _sds((B,), jnp.int32),
+        "index": _sds((), jnp.int32),
+        "cache": cache,
+    }
+    if cfg.frontend == "audio_stub":
+        # cross-KV lives inside the cache; no frames needed per step
+        pass
+    return specs
+
+
+def input_specs(arch: str, shape_name: str) -> tuple[ModelConfig, Shape, dict]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cfg = shape_adapted_config(cfg, shape)
+    if shape.kind == "train":
+        return cfg, shape, train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return cfg, shape, prefill_input_specs(cfg, shape)
+    return cfg, shape, decode_input_specs(cfg, shape)
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every (arch × shape) dry-run cell (skips applied per DESIGN.md)."""
+    return [(a, s) for a in ASSIGNED for s in cells_for(a)]

@@ -1,0 +1,14 @@
+"""Core reproduction of the paper's contribution: ternary quantization, the
+offline dense encoding, the two-phase LUT algorithm, the hardware generator
+(netlist + functional simulator), the §IV analytical cost model, and the DSE
+engine."""
+
+from repro.core import (  # noqa: F401
+    cost_model,
+    dse,
+    encoding,
+    lut_algorithm,
+    netlist,
+    quantization,
+)
+from repro.core.generator import LUTCoreConfig, LUTCoreDesign, generate  # noqa: F401

@@ -1,0 +1,151 @@
+"""LUT-core hardware generator (paper §III) — JAX/TPU edition.
+
+The paper's generator emits Chisel RTL for any ``(mu, L, K, dtype)`` point.
+Ours emits, for the same design point:
+
+  1. a structural :class:`~repro.core.netlist.Netlist` with the three LUT
+     optimizations applied exactly (consumed by the cost model and the
+     functional simulator — the "RTL"),
+  2. an area/throughput report from the §IV cost model,
+  3. a *kernel plan*: the Pallas launch geometry (BlockSpec tile shapes) that
+     realizes the same tiling on a TPU, where ``L·mu`` maps to the reduction
+     block and ``K`` to the output block,
+  4. a human-readable module hierarchy (Fig. 3) for documentation/tests.
+
+This is the single entry point the rest of the framework uses: model configs
+carry a ``LUTCoreConfig`` and the serving path asks it for the kernel plan.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core import cost_model as cm
+from repro.core import netlist as nl
+from repro.core.encoding import key_bits, table_size
+
+
+@dataclass(frozen=True)
+class LUTCoreConfig:
+    """A point in the paper's design space."""
+
+    mu: int = 3
+    L: int = 32
+    K: int = 32
+    act_dtype: str = "fp16"  # cost-model domain: "fp16" | "int8"
+
+    def __post_init__(self):
+        if not (1 <= self.mu <= 8):
+            raise ValueError(f"mu={self.mu} out of supported range [1, 8]")
+        if self.L < 1 or self.K < 1:
+            raise ValueError("L and K must be >= 1")
+        if self.act_dtype not in cm.COEFFS:
+            raise ValueError(f"unknown activation dtype {self.act_dtype!r}")
+
+    @property
+    def n(self) -> int:
+        return self.L * self.mu
+
+    @property
+    def m(self) -> int:
+        return self.K
+
+    @property
+    def tile(self) -> tuple[int, int]:
+        return (self.n, self.m)
+
+    @property
+    def throughput_mul_per_cycle(self) -> int:
+        return self.n * self.m
+
+
+@dataclass(frozen=True)
+class KernelPlan:
+    """Pallas launch geometry derived from the core config.
+
+    ``block_n`` (reduction) and ``block_m`` (outputs) are the VMEM tile shape;
+    they are hardware-aligned multiples of the core tile so one kernel "step"
+    corresponds to an integral number of core cycles.
+    """
+
+    mu: int
+    block_n: int
+    block_m: int
+    table_entries: int  # (3^mu - 1)/2 + 1 (reserved zero row)
+    key_bits: int
+
+    @property
+    def vmem_table_words(self) -> int:
+        return (self.block_n // self.mu) * self.table_entries
+
+
+@dataclass(frozen=True)
+class LUTCoreDesign:
+    """Everything the generator knows about one instantiated design point."""
+
+    config: LUTCoreConfig
+    netlist: nl.Netlist
+    build_program: nl.BuildProgram = field(repr=False)
+    area_mm2: float
+    tops_per_mm2: float
+    kernel_plan: KernelPlan
+
+    def module_hierarchy(self) -> str:
+        """Fig. 3 block diagram as text (what the Chisel generator elaborates)."""
+        c = self.config
+        T = table_size(c.mu)
+        return "\n".join([
+            f"LutCore_u{c.mu}_L{c.L}_K{c.K}_{c.act_dtype}",
+            f"├── ActivationBuffer[{c.n} x {c.act_dtype}]",
+            f"├── LutArray[L={c.L}]",
+            f"│   ├── BuildAdderTree(mu={c.mu}, adders={self.netlist.build_adders // c.L},"
+            f" depth={self.netlist.build_pipeline_depth})   # symmetry+redundancy+sparsity",
+            f"│   └── EntryRegisters[{T} x {c.act_dtype}]  (+ hardwired zero entry)",
+            f"├── FacArray[K={c.K}]",
+            f"│   ├── ReadoutMux[{T + 1}:1] x {c.L}   (key = {key_bits(c.mu)}b: 1 sym + idx)",
+            f"│   ├── SignFlip x {c.L}",
+            f"│   └── ReductionAdderTree[L={c.L}] + Accumulate",
+            f"└── OutputBuffer[{c.K} x acc]",
+        ])
+
+    def report(self) -> str:
+        c = self.config
+        return (
+            f"{self.netlist.summary()}\n"
+            f"  area      : {self.area_mm2 * 1e6:,.0f} um^2 ({self.area_mm2:.4f} mm^2)\n"
+            f"  peak      : {cm.tops(c.n, c.m):.3f} TOPS @ {cm.F_CLK_16NM/1e6:.0f} MHz"
+            f" -> {self.tops_per_mm2:.1f} TOPS/mm^2\n"
+            f"  encoding  : {key_bits(c.mu)} bits / {c.mu} weights"
+            f" = {key_bits(c.mu)/c.mu:.3f} b/w"
+        )
+
+
+def generate(config: LUTCoreConfig, mode: str = "paper") -> LUTCoreDesign:
+    """Instantiate a design point (the generator's main entry)."""
+    net = nl.make_netlist(config.mu, config.L, config.K)
+    prog = nl.build_program(config.mu)
+    area = cm.lut_core_area_mm2(config.mu, config.n, config.m, config.act_dtype, mode)
+    eff = cm.tops_per_mm2(config.mu, config.n, config.m, config.act_dtype, mode=mode)
+
+    def _align(x: int, a: int) -> int:
+        return max(a, ((x + a - 1) // a) * a)
+
+    # TPU-aligned kernel tile: reduction and output blocks are multiples of
+    # 128 (MXU/VREG lane width) that cover at least one core tile.
+    plan = KernelPlan(
+        mu=config.mu,
+        block_n=_align(config.n, 128),
+        block_m=_align(config.m, 128),
+        table_entries=table_size(config.mu) + 1,
+        key_bits=key_bits(config.mu),
+    )
+    return LUTCoreDesign(config=config, netlist=net, build_program=prog,
+                         area_mm2=area, tops_per_mm2=eff, kernel_plan=plan)
+
+
+def generate_optimal(throughput: int, act_dtype: str, mode: str = "paper") -> LUTCoreDesign:
+    """Generator + DSE: emit the area-optimal core at a throughput target."""
+    from repro.core import dse
+
+    p = dse.optimal_config_at_throughput(throughput, act_dtype, mode=mode)
+    return generate(LUTCoreConfig(mu=p.mu, L=p.L, K=p.K, act_dtype=act_dtype), mode)

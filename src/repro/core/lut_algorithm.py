@@ -1,0 +1,96 @@
+"""Pure-jnp oracle of the two-phase LUT GEMV/GEMM algorithm (paper §II-B, Fig 2).
+
+Phase 1 — **LUT Build**: for every group of ``mu`` activations, precompute the
+``T = (3^mu - 1)/2`` symmetry-reduced partial sums (plus a hardwired 0 entry).
+Functionally this is ``tables = x_groups @ C.T`` with the combo matrix ``C``.
+
+Phase 2 — **Fetch & Accumulate**: each output channel holds one encoded key
+per group; fetch ``tables[g, idx]``, conditionally invert by the symmetry bit,
+and accumulate over groups.
+
+This module is the *reference oracle* for:
+  * ``repro.kernels.lut_matmul`` (Pallas TPU kernel, validated allclose),
+  * ``repro.core.simulator`` (cycle-structured netlist simulation, bit-exact),
+and it must itself equal a plain matmul exactly on integer inputs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding
+
+
+def group_activations(x: jax.Array, mu: int) -> jax.Array:
+    """[..., N] → [..., G, mu] with zero padding to a multiple of mu."""
+    *lead, N = x.shape
+    pad = (-N) % mu
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    return x.reshape(*lead, (N + pad) // mu, mu)
+
+
+def lut_build(x_groups: jax.Array, mu: int) -> jax.Array:
+    """Build phase: [..., G, mu] → [..., G, T+1] partial-sum tables.
+
+    Entry ``[..., g, t]`` = ``dot(C[t], x_groups[..., g, :])``; entry ``T`` is
+    the hardwired zero.  In hardware this is the (symmetry/redundancy/sparsity
+    optimized) adder tree; functionally a tiny matmul.
+    """
+    C = encoding.combo_matrix(mu).astype(x_groups.dtype)  # [T+1, mu]
+    return x_groups @ C.T
+
+
+def lut_fetch_accumulate(tables: jax.Array, keys: jax.Array, mu: int) -> jax.Array:
+    """Fetch & accumulate phase.
+
+    Args:
+      tables: [..., G, T+1] built tables.
+      keys:   [O, G] encoded weight keys (shared across leading batch dims).
+
+    Returns:
+      [..., O] accumulated outputs.
+    """
+    sym, idx = encoding.split_key(keys, mu)  # [O, G] each
+    # Gather tables[..., g, idx[o, g]] for all o: use take_along_axis over T.
+    # tables[..., G, T+1], idx.T → [G, O] broadcast over leading dims.
+    gathered = jnp.take_along_axis(tables, idx.T[(None,) * (tables.ndim - 2)], axis=-1)
+    # gathered: [..., G, O]
+    sign = jnp.where(sym == 1, -1, 1).astype(tables.dtype)  # [O, G]
+    return jnp.sum(gathered * sign.T, axis=-2)
+
+
+def lut_matmul_keys(x: jax.Array, keys: jax.Array, mu: int) -> jax.Array:
+    """y[..., o] = Σ_n x[..., n] · decode(keys)[o, n] via the two-phase algorithm."""
+    xg = group_activations(x, mu)
+    tables = lut_build(xg, mu)
+    return lut_fetch_accumulate(tables, keys, mu)
+
+
+def lut_matmul(x: jax.Array, w_t: jax.Array, mu: int) -> jax.Array:
+    """Reference LUT matmul against a raw ternary matrix ``w_t [O, N]``.
+
+    Exactly equal to ``x @ w_t.T`` (integer inputs) / allclose (float).
+    """
+    keys = encoding.encode_weight_matrix(w_t, mu)
+    return lut_matmul_keys(x, keys, mu)
+
+
+def lut_matmul_onehot(x: jax.Array, keys: jax.Array, mu: int) -> jax.Array:
+    """MXU-friendly reformulation of the fetch phase (hardware adaptation).
+
+    The gather in :func:`lut_fetch_accumulate` runs on the TPU VPU.  An
+    alternative lowering turns the fetch into a matmul:
+    ``y[o] = Σ_g Σ_t onehot(keys)[o,g,t] · tables[g,t]`` — signed one-hot rows
+    make the symmetry flip free.  This trades (3^mu-1)/2 × more MACs for MXU
+    residency; profitable only when T is tiny (mu ≤ 2).  Kept as the oracle
+    for the kernel's ``fetch="onehot"`` mode.
+    """
+    T = encoding.table_size(mu)
+    sym, idx = encoding.split_key(keys, mu)
+    sign = jnp.where(sym == 1, -1, 1)
+    onehot = jax.nn.one_hot(idx, T + 1, dtype=x.dtype) * sign[..., None].astype(x.dtype)
+    xg = group_activations(x, mu)
+    tables = lut_build(xg, mu)  # [..., G, T+1]
+    return jnp.einsum("ogt,...gt->...o", onehot, tables)

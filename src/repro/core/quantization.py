@@ -1,0 +1,131 @@
+"""BitNet b1.58 ternary quantization (paper §II-A).
+
+Weight quantization follows BitNet b1.58 [Ma et al., 2024]: per-tensor absmean
+scaling followed by round-to-nearest-ternary {-1, 0, +1}.  Activations are
+quantized per-token to INT8 with absmax scaling, matching the "INT8 activation"
+operating point the paper's accelerator targets (Table I).
+
+All functions are pure-jnp and differentiable where relevant (straight-through
+estimator for QAT).  These are the *reference semantics*; the kernels in
+``repro.kernels`` and the packed serving path in ``repro.core.encoding`` must
+agree with them bit-exactly on the ternary values.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+QuantMode = Literal["fp", "dequant", "packed", "lut"]
+
+
+def absmean_scale(w: jax.Array, axis=None) -> jax.Array:
+    """BitNet b1.58 scale: mean of absolute values (per-tensor by default)."""
+    return jnp.clip(jnp.mean(jnp.abs(w), axis=axis, keepdims=axis is not None), EPS, None)
+
+
+def ternarize(w: jax.Array, axis=None) -> tuple[jax.Array, jax.Array]:
+    """Quantize weights to {-1, 0, +1} with absmean scale.
+
+    Returns ``(w_t, scale)`` with ``w_t`` int8 in {-1, 0, 1} and
+    ``w ≈ w_t * scale``.  ``axis=None`` gives the per-tensor BitNet b1.58
+    recipe; pass an axis tuple for per-channel scales.
+    """
+    scale = absmean_scale(w, axis=axis)
+    w_t = jnp.clip(jnp.round(w / scale), -1, 1).astype(jnp.int8)
+    return w_t, scale.astype(w.dtype)
+
+
+def dequantize(w_t: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return w_t.astype(dtype) * scale.astype(dtype)
+
+
+@jax.custom_vjp
+def ste_ternarize(w: jax.Array) -> jax.Array:
+    """Fake-quantized weights for QAT: forward = dequant(ternarize(w)),
+    backward = identity (straight-through estimator, as in BitNet training)."""
+    w_t, scale = ternarize(w)
+    return dequantize(w_t, scale, dtype=w.dtype)
+
+
+def _ste_fwd(w):
+    return ste_ternarize(w), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+ste_ternarize.defvjp(_ste_fwd, _ste_bwd)
+
+
+def fake_quant_ternary(w: jax.Array, axis=None) -> jax.Array:
+    """STE fake-quant via the stop-gradient identity (supports per-channel
+    ``axis``, e.g. per-expert scales on stacked MoE weights)."""
+    w_t, scale = ternarize(w, axis=axis)
+    wq = dequantize(w_t, scale, dtype=w.dtype)
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def fake_quant_acts(x: jax.Array) -> jax.Array:
+    """STE INT8 per-token activation fake-quant (stop-gradient identity)."""
+    x_q, scale = quantize_activations_int8(x)
+    xq = (x_q.astype(jnp.float32) * scale).astype(x.dtype)
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+def quantize_activations_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-token (last-axis) absmax INT8 activation quantization.
+
+    Returns ``(x_q, scale)`` with ``x ≈ x_q * scale`` and x_q int8 in
+    [-127, 127].
+    """
+    absmax = jnp.clip(jnp.max(jnp.abs(x), axis=-1, keepdims=True), EPS, None)
+    scale = (absmax / 127.0).astype(jnp.float32)
+    x_q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return x_q, scale
+
+
+@jax.custom_vjp
+def ste_quantize_activations(x: jax.Array) -> jax.Array:
+    """Fake-quantized INT8 activations with STE backward."""
+    x_q, scale = quantize_activations_int8(x)
+    return (x_q.astype(jnp.float32) * scale).astype(x.dtype)
+
+
+def _act_fwd(x):
+    return ste_quantize_activations(x), None
+
+
+def _act_bwd(_, g):
+    return (g,)
+
+
+ste_quantize_activations.defvjp(_act_fwd, _act_bwd)
+
+
+def fake_quant_matmul(x: jax.Array, w: jax.Array, quantize_acts: bool = True) -> jax.Array:
+    """QAT forward for a linear layer: y = act_q(x) @ ternary_q(w).
+
+    ``w`` is the bf16/fp32 master weight; both quantizers use STE so the
+    backward pass flows full-precision gradients to ``w`` and ``x``.
+    """
+    wq = ste_ternarize(w)
+    xq = ste_quantize_activations(x) if quantize_acts else x
+    return xq @ wq
+
+
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def ternary_weight_stats(w_t: jax.Array, dtype=jnp.float32):
+    """Diagnostics: fraction of -1/0/+1 (sparsity drives the paper's S/R savings)."""
+    w_t = w_t.astype(jnp.int32)
+    n = w_t.size
+    neg = jnp.sum(w_t == -1) / n
+    zero = jnp.sum(w_t == 0) / n
+    pos = jnp.sum(w_t == 1) / n
+    return {"neg": neg.astype(dtype), "zero": zero.astype(dtype), "pos": pos.astype(dtype)}

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for ternary matmul (LUT / sign-flip / packed-dequant).
+
+Each kernel module holds the pl.pallas_call + BlockSpec implementation;
+``ops.py`` is the jit'd public API and ``ref.py`` the pure-jnp oracles.
+Kernels target TPU and are validated on CPU with interpret=True.
+"""
+
+from repro.kernels.ops import (  # noqa: F401
+    encode_for_lut,
+    encode_packed,
+    ternary_linear_lut,
+    ternary_linear_packed,
+    ternary_linear_signflip,
+)

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: packed-ternary dequantize + matmul (deployment path).
+
+This is the kernel that realizes the paper's *bandwidth* win on TPU: weights
+stream from HBM as base-3-packed uint8 (5 trits/byte = 1.6 bits/weight, the
+paper's §III-D density) and are expanded to the activation dtype **in VMEM**,
+then contracted on the MXU.  HBM traffic for weights drops 10× vs bf16 and
+20% vs naive 2-bit packing — exactly the decode-stage bottleneck the paper
+attacks.
+
+Decode uses arithmetic base-3 digit extraction (5 div-mod-3 steps on the VPU)
+rather than a table gather: divides by the constant 3 lower to
+multiply-by-reciprocal, and the whole decode vectorizes across the 8×128 VREG
+lanes with no dynamic addressing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.encoding import TRITS_PER_BYTE
+
+
+def _unpack_block(p: jax.Array, out_dtype) -> jax.Array:
+    """[bo, bn/5] uint8 → [bo, bn] trits in out_dtype (arithmetic decode)."""
+    v = p.astype(jnp.int32)
+    digs = []
+    for _ in range(TRITS_PER_BYTE):
+        digs.append((v % 3 - 1).astype(out_dtype))
+        v = v // 3
+    # [bo, bn/5, 5] → [bo, bn]; trit i of byte j is weight 5*j + i.
+    w = jnp.stack(digs, axis=-1)
+    return w.reshape(p.shape[0], -1)
+
+
+def _dequant_kernel(x_ref, p_ref, out_ref):
+    """x_ref [bb, bn] float; p_ref [bo, bn//5] uint8; out [bb, bo] f32."""
+    k = pl.program_id(2)
+    x = x_ref[...]
+    w = _unpack_block(p_ref[...], x.dtype)  # [bo, bn]
+    partial = jax.lax.dot_general(
+        x, w, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "block_b", "block_o", "block_n", "interpret")
+)
+def packed_matmul(
+    x: jax.Array,
+    packed: jax.Array,
+    n: int,
+    *,
+    block_b: int = 8,
+    block_o: int = 128,
+    block_n: int = 640,  # multiple of 5 (pack group) and 128 (lanes)
+    interpret: bool = True,
+) -> jax.Array:
+    """y[b, o] = Σ_n x[b, n] · unpack(packed)[o, n].
+
+    Args:
+      x:      [B, N] activations (N may include padding up to 5·packed cols).
+      packed: [O, ceil(N/5)] base-3 packed ternary weights.
+      n:      logical N (unpacked columns beyond n are zero by construction).
+    """
+    B, N = x.shape
+    O, NB = packed.shape
+    if N < n or NB * TRITS_PER_BYTE < n:
+        raise ValueError((N, NB, n))
+    # pad x to the full unpacked width (pad trits decode to -1? no: pack_base3
+    # zero-pads, and value-0 trits decode to 0, so extra x columns are safely
+    # multiplied by 0; but x itself must cover NB*5 columns)
+    full = NB * TRITS_PER_BYTE
+    if N < full:
+        x = jnp.pad(x, ((0, 0), (0, full - N)))
+    N = full
+
+    block_n = min(block_n, N)
+    block_n -= block_n % TRITS_PER_BYTE
+    block_b = min(block_b, B)
+    block_o = min(block_o, O)
+    pad_b = (-B) % block_b
+    pad_o = (-O) % block_o
+    pad_n = (-N) % block_n
+    if pad_b or pad_n:
+        x = jnp.pad(x, ((0, pad_b), (0, pad_n)))
+    if pad_o or pad_n:
+        packed = jnp.pad(packed, ((0, pad_o), (0, pad_n // TRITS_PER_BYTE)))
+        # note: padded bytes are 0 → trits (-1,-1,-1,-1,-1)… but the matching
+        # x columns are zero-padded, so the products vanish.  Padded *rows*
+        # are sliced off below.
+    Bp, Op, Np = B + pad_b, O + pad_o, N + pad_n
+
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(Bp // block_b, Op // block_o, Np // block_n),
+        in_specs=[
+            pl.BlockSpec((block_b, block_n), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_o, block_n // TRITS_PER_BYTE), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Op), jnp.float32),
+        interpret=interpret,
+    )(x, packed)
+    return out[:B, :O]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against these.
+They are deliberately written as straight-line jnp with no tiling so they are
+"obviously correct"; the LUT oracle additionally round-trips through
+``repro.core.lut_algorithm`` which is itself proven equal to a plain matmul.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding
+from repro.core import lut_algorithm as la
+
+
+def lut_matmul_ref(x: jax.Array, keys: jax.Array, mu: int) -> jax.Array:
+    """y[..., o] = Σ_n x[..., n] · decode(keys)[o, n] via the two-phase LUT
+    algorithm (which equals the plain matmul exactly)."""
+    return la.lut_matmul_keys(x, keys, mu)
+
+
+def signflip_matmul_ref(x: jax.Array, w_t: jax.Array) -> jax.Array:
+    """Sign-flip baseline: conditional add, no multiplier.
+
+    w_t: [O, N] in {-1, 0, +1}.  Written as the mux-select it models.
+    """
+    xe = x[..., None, :]  # [..., 1, N]
+    sel = jnp.where(w_t > 0, xe, jnp.where(w_t < 0, -xe, jnp.zeros_like(xe)))
+    return jnp.sum(sel, axis=-1)
+
+
+def packed_matmul_ref(x: jax.Array, packed: jax.Array, n: int) -> jax.Array:
+    """Dequant path: unpack base-3 bytes → ternary → full-width matmul."""
+    w = encoding.unpack_base3(packed, n).astype(x.dtype)  # [O, N]
+    return x @ w.T

@@ -1,0 +1,79 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Packing ablation: the paper's bandwidth claim at the framework level.
+
+Lowers the same serve_step twice — once with packed 1.6-bit ternary weights
+(deployment artifact) and once with bf16 weights — and compares the roofline
+memory term and weight bytes/device.  The bitnet-2b × decode_4k cell is the
+paper's own operating point (short context: weights, not KV, dominate).
+
+Usage: python -m repro.launch.ablate [--arch bitnet-b1.58-2b] [--seq 4096]
+"""
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import get_config
+from repro.configs.shapes import Shape
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models.decode import decode_step, init_cache, quantize_for_serving
+from repro.models.model import init_params
+from repro.parallel import sharding as sh
+
+
+def lower_decode(cfg, shape, params_sds, mesh):
+    pspecs = sh.param_specs(params_sds, mesh)
+    psh = sh.to_shardings(pspecs, mesh)
+    cache_sds = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    csh = sh.to_shardings(sh.cache_specs(cache_sds, mesh), mesh)
+    tok_sds = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    tok_sh = sh.to_shardings(sh.batch_specs(tok_sds, mesh), mesh)
+    fn = jax.jit(lambda p, c, t, i: decode_step(p, cfg, c, t, i),
+                 in_shardings=(psh, csh, tok_sh, NamedSharding(mesh, P())),
+                 out_shardings=(None, csh), donate_argnums=(1,))
+    with mesh:
+        compiled = fn.lower(params_sds, cache_sds, tok_sds,
+                            jax.ShapeDtypeStruct((), jnp.int32)).compile()
+    roof, _ = rl.from_compiled(compiled, mesh.devices.size)
+    import math
+    wbytes = sum(
+        math.prod(x.shape) * x.dtype.itemsize
+        for x in jax.tree.leaves(params_sds)) / 1e9
+    return roof, wbytes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="bitnet-b1.58-2b")
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--batch", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = Shape("ablate", args.seq, args.batch, "decode")
+    mesh = make_production_mesh(multi_pod=False)
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(functools.partial(init_params, cfg), key)
+    packed_sds = jax.eval_shape(
+        functools.partial(quantize_for_serving, cfg=cfg), params_sds)
+
+    r_bf16, w_bf16 = lower_decode(cfg, shape, params_sds, mesh)
+    r_pack, w_pack = lower_decode(cfg, shape, packed_sds, mesh)
+    print(f"{args.arch} × decode seq={args.seq} batch={args.batch} (256 chips)")
+    print(f"  weights global: bf16 {w_bf16:.2f} GB vs packed {w_pack:.2f} GB "
+          f"({w_bf16 / w_pack:.1f}x)")
+    print(f"  memory term: bf16 {r_bf16.memory_s*1e3:.1f} ms vs packed "
+          f"{r_pack.memory_s*1e3:.1f} ms ({r_bf16.memory_s/r_pack.memory_s:.2f}x)")
+    print(f"  bytes/device: bf16 {r_bf16.bytes_per_device/1e9:.2f} GB vs packed "
+          f"{r_pack.bytes_per_device/1e9:.2f} GB")
+
+
+if __name__ == "__main__":
+    main()

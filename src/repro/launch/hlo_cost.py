@@ -1,0 +1,358 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` counts every computation **once** — a
+``lax.scan`` over 60 layers contributes a single layer's FLOPs (verified in
+tests/test_hlo_cost.py).  Since every model here scans over layers (and over
+loss/SSD chunks), raw numbers can be ~10-100× off.  This module re-derives
+costs from ``compiled.as_text()`` with loop multiplicities:
+
+  1. segment the module into named computations;
+  2. per computation, accumulate
+       * dot/convolution FLOPs (2 × prod(result) × prod(contracted dims)),
+       * collective bytes by kind (result-shape proxy; reduce-scatter scaled
+         by replica-group size),
+       * materialized bytes (Σ result-shape bytes of top-level ops — a
+         first-order HBM-traffic proxy: post-fusion, each tensor is written
+         once and read ~once),
+       * call edges (fusion `calls=`, `call`, `while` body/condition,
+         `conditional` branches);
+  3. recover each while loop's trip count from the canonical counted-loop
+     form (`compare(iv, constant(N)), direction=LT` in the condition);
+  4. propagate multipliers from ENTRY through the call graph and aggregate.
+
+All numbers remain *derived from the compiled dry-run artifact*; only the
+loop multiplicity bookkeeping is ours.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_SHAPE = re.compile(r"([a-z]\d*[a-z]*\d*[a-z]*)\[([0-9,]*)\]")
+_RESULT = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OPNAME = re.compile(r"\s*([a-z][a-z0-9\-]*)\(")
+_DOT_ARGS = re.compile(r"dot\(([^)]*)\)")
+_ARG_NAME = re.compile(r"%([\w\.\-]+)")
+_ARG_INLINE_SHAPE = re.compile(r"([a-z]\d*[a-z]*\d*)\[([0-9,]*)\][^\s]*\s+%([\w\.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_WHILE = re.compile(r"while\(.*?\)\s*,\s*condition=%?([\w\.\-]+)\s*,\s*body=%?([\w\.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_RG_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_RG_LIST = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class Computation:
+    name: str
+    flops: float = 0.0
+    bytes_materialized: float = 0.0
+    collectives: dict = field(default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+    edges: list = field(default_factory=list)  # (callee, kind)
+    while_bodies: list = field(default_factory=list)  # (cond, body)
+    const_s32: list = field(default_factory=list)
+    is_entry: bool = False
+    lines: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)  # %name -> (dtype, dims)
+    # HBM-traffic model inputs (filled by _parse_line):
+    op_records: list = field(default_factory=list)
+    # each: (name, op, result_bytes, arg_names, callee, dus_update_bytes)
+    root_op: str = ""
+    root_dus_update: float = 0.0
+    param_names: set = field(default_factory=set)
+    param_index: dict = field(default_factory=dict)  # name -> position
+
+
+def _parse_line(comp: Computation, line: str):
+    for m in _CONST_S32.finditer(line):
+        comp.const_s32.append(int(m.group(1)))
+    r = _RESULT.match(line)
+    if not r:
+        return
+    _, rhs = r.groups()
+    # result shape(s): first shape token(s) before the op name's paren
+    shapes = _SHAPE.findall(rhs.split("(")[0])
+    result_bytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+    om = _OPNAME.match(rhs) or _OPNAME.search(rhs.split("(")[0] + "(")
+    # op name = last identifier before the first '(' in canonical text
+    head = rhs.split("(")[0].strip()
+    op = head.split()[-1] if head else ""
+    if not op.replace("-", "").isalnum():
+        op = om.group(1) if om else ""
+
+    if op == "dot":
+        dm = _DOT_ARGS.search(rhs)
+        cdims = _CONTRACT.search(rhs)
+        contract = 1
+        if dm:
+            args = dm.group(1)
+            inline = _ARG_INLINE_SHAPE.findall(args)
+            if inline:
+                ldims = [int(d) for d in inline[0][1].split(",") if d]
+            else:
+                names = _ARG_NAME.findall(args)
+                ldims = None
+                if names and names[0] in comp.shapes:
+                    ldims = [int(d) for d in comp.shapes[names[0]][1].split(",") if d]
+            if ldims is not None and cdims and cdims.group(1):
+                for i in (int(x) for x in cdims.group(1).split(",")):
+                    if i < len(ldims):
+                        contract *= ldims[i]
+        out_elems = 1
+        if shapes:
+            for d in shapes[0][1].split(","):
+                if d:
+                    out_elems *= int(d)
+        comp.flops += 2.0 * out_elems * contract
+    elif op == "convolution":
+        dm = re.search(r"convolution\(([^)]*)\)", rhs)
+        if dm and shapes:
+            names = _ARG_NAME.findall(dm.group(1))
+            if len(names) >= 2 and names[1] in comp.shapes:
+                kdims = [int(d) for d in comp.shapes[names[1]][1].split(",") if d]
+                out_elems = math.prod(int(d) for d in shapes[0][1].split(",") if d)
+                if kdims:
+                    comp.flops += 2.0 * out_elems * math.prod(kdims[:-1])
+    elif op in COLLECTIVE_KINDS:
+        b = result_bytes
+        if op == "reduce-scatter":
+            g = _RG_IOTA.search(rhs)
+            if g:
+                b *= int(g.group(2))
+            else:
+                g2 = _RG_LIST.search(rhs)
+                if g2:
+                    b *= len(g2.group(1).split(","))
+        comp.collectives[op] += b
+
+    w = _WHILE.search(rhs)
+    if w:
+        comp.while_bodies.append((w.group(1), w.group(2)))
+    callee = None
+    for m in _CALLS.finditer(rhs):
+        comp.edges.append((m.group(1), "call"))
+        callee = m.group(1)
+    for m in _TO_APPLY.finditer(rhs):
+        comp.edges.append((m.group(1), "apply"))
+    bm = _BRANCHES.search(rhs)
+    if bm:
+        for b in bm.group(1).replace("%", "").split(","):
+            comp.edges.append((b.strip(), "branch"))
+
+    # --- HBM traffic bookkeeping ---
+    name = r.group(1)
+    if op == "parameter":
+        comp.param_names.add(name)
+        pm = re.search(r"parameter\((\d+)\)", rhs)
+        if pm:
+            comp.param_index[name] = int(pm.group(1))
+    args_m = re.search(rf"{re.escape(op)}\(([^)]*)\)", rhs) if op else None
+    arg_names = _ARG_NAME.findall(args_m.group(1)) if args_m else []
+    dus_update = None
+    if op == "dynamic-update-slice" and len(arg_names) >= 2:
+        upd = comp.shapes.get(arg_names[1])
+        if upd:
+            dus_update = _shape_bytes(*upd)
+    comp.op_records.append((name, op, result_bytes, arg_names, callee, dus_update))
+    if line.lstrip().startswith("ROOT") or " ROOT " in line:
+        comp.root_op = op
+        if dus_update is not None:
+            comp.root_dus_update = dus_update
+
+
+def parse_computations(text: str, keep_lines: bool = False) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        h = _COMP_HDR.match(s) if (s.endswith("{") and "->" in s) else None
+        if h:
+            cur = Computation(name=h.group(2), is_entry=bool(h.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None or s == "}" or not s:
+            continue
+        cur.lines.append(s)
+    # pass 1: result-shape map; pass 2: full parse with operand resolution
+    for comp in comps.values():
+        for s in comp.lines:
+            r = _RESULT.match(s)
+            if r:
+                sh = _SHAPE.findall(r.group(2).split("(")[0])
+                if sh:
+                    comp.shapes[r.group(1)] = sh[0]
+        for s in comp.lines:
+            _parse_line(comp, s)
+        if not keep_lines:
+            comp.lines = []  # free
+    return comps
+
+
+def trip_count(cond: Computation) -> int:
+    """Counted loops compare the induction var against constant N (LT)."""
+    return max(cond.const_s32) if cond.const_s32 else 1
+
+
+_NO_WRITE = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "", "while", "conditional"}
+
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _param_read_profile(comp: Computation) -> dict:
+    """position → bytes actually read per execution, for parameters whose
+    every consumer is a slice (read = Σ slice results, not the whole buffer).
+    Positions not present read their full size."""
+    consumers: dict[str, list] = {}
+    for name, op, result_bytes, args, callee, _ in comp.op_records:
+        for a in args:
+            if a in comp.param_names:
+                consumers.setdefault(a, []).append((op, result_bytes))
+    out = {}
+    for pname, cons in consumers.items():
+        if cons and all(op in _SLICE_OPS for op, _ in cons):
+            idx = comp.param_index.get(pname)
+            if idx is not None:
+                out[idx] = float(sum(rb for _, rb in cons))
+    return out
+
+
+def computation_traffic(comp: Computation, comps: dict) -> float:
+    """First-order HBM traffic of one execution of a *control-flow*
+    computation (ENTRY / while body):
+
+      writes — every top-level op's result bytes, except (a) in-place
+        dynamic-update-slice (count the updated slice, not the buffer; XLA
+        aliases the rest), including fusions whose root is a DUS, and
+        (b) pure metadata ops;
+      reads  — external operands (parameters / loop carry / constants)
+        consumed by compute ops, each counted once per execution (weights
+        and KV caches live here — this is where 1.6-bit packing shows up).
+
+    Intermediate tensors are counted once (at production) — a deliberate
+    write≈read merge that keeps the proxy first-order.
+    """
+    # externally-produced names: parameters and gte chains off them
+    external = set(comp.param_names)
+    for name, op, _, args, _, _ in comp.op_records:
+        if op == "get-tuple-element" and args and args[0] in external:
+            external.add(name)
+
+    traffic = 0.0
+    reads_counted: set = set()
+    for name, op, result_bytes, args, callee, dus_update in comp.op_records:
+        if op in _NO_WRITE:
+            continue
+        # writes
+        if op == "dynamic-update-slice" and dus_update is not None:
+            traffic += dus_update
+        elif op == "fusion" and callee in comps and \
+                comps[callee].root_op == "dynamic-update-slice":
+            traffic += comps[callee].root_dus_update or 0.0
+        else:
+            traffic += result_bytes
+        # external reads (slice-aware through fusions: a consumer that only
+        # dynamic-slices a carried buffer reads the slice, not the buffer)
+        slice_prof = (_param_read_profile(comps[callee])
+                      if op == "fusion" and callee in comps else {})
+        if op in _SLICE_OPS:
+            # a bare slice of an external reads its own result size —
+            # already counted as the write above; skip the full-buffer read
+            args = args[:0]
+        for pos, a in enumerate(args):
+            if a in external and (a, op) not in reads_counted:
+                reads_counted.add((a, op))
+                if pos in slice_prof:
+                    traffic += slice_prof[pos]
+                else:
+                    shp = comp.shapes.get(a)
+                    if shp:
+                        traffic += _shape_bytes(*shp)
+    return traffic
+
+
+def propagate_multipliers(comps: dict) -> dict[str, float]:
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    mult: dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry.name] = 1.0
+    for _ in range(len(comps)):
+        changed = False
+        for c in comps.values():
+            m = mult[c.name]
+            if m == 0.0:
+                continue
+            for callee, kind in c.edges:
+                if callee in mult and mult[callee] < m:
+                    mult[callee] = m
+                    changed = True
+            for cond, body in c.while_bodies:
+                t = trip_count(comps[cond]) if cond in comps else 1
+                if body in mult and mult[body] < m * t:
+                    mult[body] = m * t
+                    changed = True
+                if cond in mult and mult[cond] < m * (t + 1):
+                    mult[cond] = m * (t + 1)
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+def control_flow_comps(comps: dict) -> set:
+    """ENTRY + while bodies/conds + conditional branches: the computations
+    whose op results are materialized buffers (fusion callees are interior)."""
+    ctl = {c.name for c in comps.values() if c.is_entry}
+    for c in comps.values():
+        for cond, body in c.while_bodies:
+            ctl.add(cond)
+            ctl.add(body)
+        for callee, kind in c.edges:
+            if kind == "branch":
+                ctl.add(callee)
+    return ctl
+
+
+def analyze(text: str) -> dict:
+    comps = parse_computations(text)
+    mult = propagate_multipliers(comps)
+    ctl = control_flow_comps(comps)
+
+    out = {"flops": 0.0, "bytes": 0.0,
+           "collectives": {k: 0.0 for k in COLLECTIVE_KINDS},
+           "n_computations": len(comps)}
+    for c in comps.values():
+        m = mult.get(c.name, 0.0)
+        out["flops"] += m * c.flops
+        if c.name in ctl:
+            c.bytes_materialized = computation_traffic(c, comps)
+            out["bytes"] += m * c.bytes_materialized
+        for k in COLLECTIVE_KINDS:
+            out["collectives"][k] += m * c.collectives[k]
+    out["collective_bytes"] = sum(out["collectives"].values())
+    return out

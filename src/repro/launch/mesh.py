@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Target hardware: TPU v5e pods — 256 chips/pod (16×16), 2 pods = 512 chips for
+the multi-pod dry-run.  Defined as functions (never module-level constants)
+so importing this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(devices: int, model_parallel: int = 1):
+    """Small meshes for tests/examples on real local devices."""
+    assert devices % model_parallel == 0
+    return jax.make_mesh((devices // model_parallel, model_parallel),
+                         ("data", "model"))
+
+
+# Hardware constants for the roofline (assignment block).
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512

@@ -1,0 +1,88 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON records.
+
+Usage: python -m repro.launch.report [--dir experiments/dryrun]
+Prints the §Dry-run and §Roofline markdown tables.
+"""
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(d):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_s(x):
+    return f"{x*1e3:,.1f}" if x < 100 else f"{x*1e3:,.0f}"
+
+
+def roofline_table(recs, mesh="16x16"):
+    rows = [r for r in recs if r.get("ok") and r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | compute ms | memory ms | collective ms | bottleneck | "
+           "MODEL_FLOPS/HLO | step ms |",
+           "|---|---|---:|---:|---:|---|---:|---:|"]
+    for r in rows:
+        ro = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(ro['compute_s'])} | "
+            f"{fmt_s(ro['memory_s'])} | {fmt_s(ro['collective_s'])} | "
+            f"{ro['bottleneck']} | {r.get('model_flops_ratio', 0):.2f} | "
+            f"{fmt_s(ro['step_time_s'])} |")
+    return "\n".join(out)
+
+
+def dryrun_table(recs):
+    rows = [r for r in recs if r.get("ok")]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    out = ["| arch | shape | mesh | params GB/dev | state GB/dev | temp GB/dev | "
+           "collective GB/dev | compile s |",
+           "|---|---|---|---:|---:|---:|---:|---:|"]
+    for r in rows:
+        ma = r.get("memory_analysis", {})
+        extra = r.get("state_bytes_per_device",
+                      r.get("cache_bytes_per_device", 0)) / 1e9
+        pb = r.get("packed_bytes_per_device", r.get("param_bytes_per_device", 0)) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {pb:.2f} | {extra:.2f} | "
+            f"{ma.get('temp_size_in_bytes', 0)/1e9:.2f} | "
+            f"{r['roofline']['collective_bytes_per_device']/1e9:.2f} | "
+            f"{r.get('compile_s', 0):.0f} |")
+    return "\n".join(out)
+
+
+def summary(recs):
+    ok = [r for r in recs if r.get("ok")]
+    n_single = len([r for r in ok if r["mesh"] == "16x16"])
+    n_multi = len([r for r in ok if r["mesh"] == "2x16x16"])
+    bn = {}
+    for r in ok:
+        if r["mesh"] == "16x16":
+            bn[r["roofline"]["bottleneck"]] = bn.get(r["roofline"]["bottleneck"], 0) + 1
+    return (f"{len(ok)}/{len(recs)} cells compiled "
+            f"({n_single} single-pod + {n_multi} multi-pod); "
+            f"single-pod bottlenecks: {bn}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun"))
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("## Summary\n")
+    print(summary(recs))
+    print("\n## Roofline (single-pod 16x16, 256 chips)\n")
+    print(roofline_table(recs))
+    print("\n## Dry-run memory/collective detail (both meshes)\n")
+    print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

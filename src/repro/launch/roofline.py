@@ -1,0 +1,160 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs   / (chips × 197e12)
+    memory     = HLO_bytes   / (chips × 819e9)
+    collective = Σ collective-bytes / (chips × 50e9)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are not
+in cost_analysis: we parse the *post-SPMD* optimized HLO
+(``compiled.as_text()``) and sum the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+For reduce-scatter the data moved per participant is ~result × group_size
+(ring), so we scale by the replica-group size; for the others the result
+shape is the standard per-device traffic proxy.
+
+Note cost_analysis FLOPs/bytes on the CPU backend are whole-program totals
+for one SPMD program instance (= per device); we report them as such and
+multiply by chips for the global number.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+from repro.launch import mesh as mesh_mod
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_OP_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device collective traffic by op kind from optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.groups()
+        b = _shape_bytes(dtype, dims)
+        if kind == "reduce-scatter":
+            g = _GROUPS_RE.search(line)
+            if g:
+                b *= int(g.group(2))  # iota groups [n, size] → size
+            else:
+                g2 = _GROUPS_LIST_RE.search(line)
+                if g2:
+                    b *= len(g2.group(1).split(","))
+        out[kind] += b
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+@dataclass
+class Roofline:
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / mesh_mod.PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / mesh_mod.HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / mesh_mod.ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+        }
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (fwd-only), N = active params."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def from_compiled(compiled, chips: int) -> tuple[Roofline, dict]:
+    """Roofline terms from the compiled artifact.
+
+    Primary source: :mod:`repro.launch.hlo_cost` — a trip-count-aware re-walk
+    of the optimized HLO (XLA's ``cost_analysis`` counts while-loop bodies
+    once; with scan-over-layers that understates FLOPs by ~n_layers, verified
+    in tests/test_hlo_cost.py).  Raw ``cost_analysis`` numbers are reported
+    alongside for transparency.
+    """
+    from repro.launch import hlo_cost
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    text = compiled.as_text()
+    h = hlo_cost.analyze(text)
+    coll = dict(h["collectives"])
+    coll["total"] = h["collective_bytes"]
+    coll["raw_xla_flops"] = float(ca.get("flops", 0.0))
+    coll["raw_xla_bytes"] = float(ca.get("bytes accessed", 0.0))
+    rl = Roofline(chips=chips, flops_per_device=h["flops"],
+                  bytes_per_device=h["bytes"],
+                  collective_bytes_per_device=float(h["collective_bytes"]))
+    return rl, coll

@@ -1,0 +1,1 @@
+"""Model zoo: config schema, shared layers, family trunks, serving paths."""

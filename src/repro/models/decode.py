@@ -1,0 +1,513 @@
+"""Serving-side model paths: ternary weight packing, KV/state caches,
+prefill, and single-token decode for every architecture family.
+
+``quantize_for_serving`` converts a trained parameter tree into the
+deployment artifact the paper targets: every ternary-eligible projection is
+replaced by ``{"packed": uint8 base-3 (1.6 b/w), "scale": absmean}``; decode
+then streams ~10× fewer weight bytes from HBM than bf16 — the memory-bound
+decode win that motivates the whole accelerator line (§I).
+
+Caches use a ring buffer when the config has a sliding ``window`` (zamba2's
+shared attention at 500k context), with absolute-position slots so RoPE'd
+keys stay valid after wraparound.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding
+from repro.core.quantization import ternarize
+from repro.models import ssm, xlstm
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    attention,
+    ffn,
+    linear,
+    moe_ffn,
+    rms_norm,
+)
+from repro.models.model import (
+    Params,
+    _whisper_encode,
+    embed_tokens,
+    lm_head_w,
+    sinusoidal_position_at,
+    sinusoidal_positions,
+)
+
+#: leaf-dict keys (within their parent block) that carry ternary weights
+TERNARY_KEYS = {"wq", "wk", "wv", "wo", "wi", "wg", "up", "down", "wz", "wx",
+                "ffn_up", "ffn_down"}
+#: parent keys whose children must stay fp regardless
+FP_PARENTS = {"router"}
+#: top-level entries that stay fp
+FP_TOP = {"embed", "lm_head"}
+
+
+def _pack_leaf(leaf: dict, per_expert: bool) -> dict:
+    w = leaf["w"]  # [..., din, dout]
+    if per_expert:
+        # [L, E, din, dout] → per-expert scales
+        w_t, scale = ternarize(w, axis=(-2, -1))
+        scale = scale[..., 0, 0]
+    else:
+        if w.ndim == 2:
+            w_t, scale = ternarize(w)
+        else:  # stacked [L, din, dout] → per-layer scale
+            w_t, scale = ternarize(w, axis=(-2, -1))
+            scale = scale[..., 0, 0]
+    packed = encoding.pack_base3(jnp.swapaxes(w_t, -1, -2))  # [..., dout, ceil(din/5)]
+    # Pad the packed dim to a multiple of 128 bytes: keeps TP shardings
+    # divisible on any mesh axis ≤128 (zero bytes decode to trits past the
+    # logical width, which unpack_base3(·, n) slices off).
+    pad = (-packed.shape[-1]) % 128
+    if pad:
+        packed = jnp.pad(packed, [(0, 0)] * (packed.ndim - 1) + [(0, pad)])
+    out = {"packed": packed, "scale": scale.astype(jnp.bfloat16)}
+    if "b" in leaf:
+        out["b"] = leaf["b"]
+    return out
+
+
+def quantize_for_serving(p: Params, cfg: ModelConfig) -> Params:
+    """Training params → packed-ternary serving params (offline, like the
+    paper's offline weight encoding)."""
+
+    def walk(node, key_path):
+        if isinstance(node, dict):
+            if "w" in node and key_path and key_path[-1] in TERNARY_KEYS \
+                    and not (set(key_path) & (FP_PARENTS | FP_TOP)):
+                per_expert = node["w"].ndim == 4 and "moe" in key_path
+                return _pack_leaf(node, per_expert)
+            return {k: walk(v, key_path + (k,)) for k, v in node.items()}
+        return node
+
+    return walk(p, ())
+
+
+def packed_bits_per_weight(p: Params) -> float:
+    """Measured storage density of the serving artifact (paper: ≈1.6 b/w)."""
+    packed_bits = ternary_weights = 0
+
+    def walk(node):
+        nonlocal packed_bits, ternary_weights
+        if isinstance(node, dict):
+            if "packed" in node:
+                packed_bits += node["packed"].size * 8
+                ternary_weights += node["packed"].size * encoding.TRITS_PER_BYTE
+            else:
+                for v in node.values():
+                    walk(v)
+
+    walk(p)
+    return packed_bits / max(ternary_weights, 1)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def cache_len(cfg: ModelConfig, s_max: int) -> int:
+    return min(cfg.window, s_max) if cfg.window else s_max
+
+
+def init_cache(cfg: ModelConfig, B: int, s_max: int, dtype=jnp.bfloat16) -> dict:
+    CL = cache_len(cfg, s_max)
+    kv = lambda n: {
+        "k": jnp.zeros((n, B, CL, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((n, B, CL, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((n, CL), -1, jnp.int32),
+    }
+    if cfg.is_encdec:
+        c = kv(cfg.n_layers)
+        c["cross_k"] = jnp.zeros((cfg.n_layers, B, cfg.enc_seq, cfg.n_kv_heads,
+                                  cfg.head_dim), dtype)
+        c["cross_v"] = jnp.zeros_like(c["cross_k"])
+        return c
+    if cfg.block_pattern == "attn":
+        return kv(cfg.n_layers)
+    if cfg.block_pattern == "zamba2":
+        d_in, H, N = ssm.ssm_dims(cfg)
+        P = cfg.ssm_head_dim
+        conv_ch = d_in + 2 * N
+        c = kv(cfg.n_layers // cfg.attn_every)
+        c["ssm"] = jnp.zeros((cfg.n_layers, B, H, N, P), jnp.float32)
+        c["conv"] = jnp.zeros((cfg.n_layers, B, cfg.ssm_conv - 1, conv_ch), dtype)
+        return c
+    if cfg.block_pattern == "xlstm":
+        d_in, H, dk = xlstm.mlstm_dims(cfg)
+        half = cfg.n_layers // 2
+        return {
+            "mC": jnp.zeros((half, B, H, dk, dk), jnp.float32),
+            "mn": jnp.zeros((half, B, H, dk), jnp.float32),
+            "mm": jnp.full((half, B, H), -1e30, jnp.float32),
+            "sc": jnp.zeros((half, B, cfg.d_model), jnp.float32),
+            "sn": jnp.zeros((half, B, cfg.d_model), jnp.float32) + 1e-6,
+            "sh": jnp.zeros((half, B, cfg.d_model), jnp.float32),
+            "sm": jnp.full((half, B, cfg.d_model), -1e30, jnp.float32),
+        }
+    raise ValueError(cfg.block_pattern)
+
+
+def _ring_slot(cfg: ModelConfig, s_max: int, index: jax.Array) -> jax.Array:
+    CL = cache_len(cfg, s_max)
+    return index % CL if cfg.window else index
+
+
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+
+def _pad_kv_to(k: jax.Array, CL: int):
+    """[L?, B, S, H, hd] → padded/truncated to CL slots (keep the last CL)."""
+    S = k.shape[-3]
+    if S >= CL:
+        return k[..., S - CL:, :, :]
+    pad = [(0, 0)] * k.ndim
+    pad[-3] = (0, CL - S)
+    return jnp.pad(k, pad)
+
+
+def _prefill_positions(S: int, CL: int):
+    pos = jnp.arange(S, dtype=jnp.int32)
+    if S >= CL:
+        return pos[S - CL:]
+    return jnp.concatenate([pos, jnp.full((CL - S,), -1, jnp.int32)])
+
+
+def prefill(p: Params, cfg: ModelConfig, batch: dict, s_max: int):
+    """Run the full prompt once; return (cache, last-position logits).
+
+    A single kv/state-collecting pass over the trunk (``lax.scan`` ys carry
+    the per-layer KV/states) — prefill costs exactly one forward.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    CL = cache_len(cfg, s_max)
+    cache = init_cache(cfg, B, CL if cfg.window else s_max, dtype=jnp.bfloat16)
+    positions = jnp.arange(S)
+    from repro.models.layers import mask_padded_vocab
+
+    def final_logits(x):
+        x = rms_norm(p["final_norm"], x, offset=cfg.rmsnorm_offset)
+        return mask_padded_vocab(
+            (x[:, -1] @ lm_head_w(p, cfg)).astype(jnp.float32), cfg.vocab_size)
+
+    if cfg.block_pattern == "attn" and not cfg.is_encdec:
+        hs = embed_tokens(p, cfg, tokens, batch.get("vision_embeds"))
+
+        def block_kv(x, blk, is_moe):
+            hn = rms_norm(blk["ln1"], x, offset=cfg.rmsnorm_offset)
+            a, (k, v) = attention(blk["attn"], hn, cfg, positions=positions,
+                                  window=cfg.window, return_kv=True)
+            x = x + a
+            hn2 = rms_norm(blk["ln2"], x, offset=cfg.rmsnorm_offset)
+            if is_moe:
+                f, _ = moe_ffn(blk["moe"], hn2, cfg)
+            else:
+                f = ffn(blk["ffn"], hn2, cfg)
+            return x + f, (k, v)
+
+        if "dense_blocks" in p:  # interleaved MoE
+            kk = cfg.moe_every
+            groups = cfg.n_layers // kk
+            dense = jax.tree.map(lambda t: t.reshape(groups, kk - 1, *t.shape[1:]),
+                                 p["dense_blocks"])
+
+            def group_body(x, blks):
+                dblk, mblk = blks
+                x, (kd, vd) = jax.lax.scan(
+                    lambda xx, b: block_kv(xx, b, False), x, dblk)
+                x, (km, vm) = block_kv(x, mblk, True)
+                k = jnp.concatenate([kd, km[None]], axis=0)  # [kk, B, S, H, hd]
+                v = jnp.concatenate([vd, vm[None]], axis=0)
+                return x, (k, v)
+
+            hs, (ks, vs) = jax.lax.scan(group_body, hs, (dense, p["moe_blocks"]))
+            ks = ks.reshape(cfg.n_layers, *ks.shape[2:])
+            vs = vs.reshape(cfg.n_layers, *vs.shape[2:])
+        else:
+            hs, (ks, vs) = jax.lax.scan(
+                lambda x, b: block_kv(x, b, bool(cfg.n_experts)), hs, p["blocks"])
+        logits = final_logits(hs)
+        cache["k"] = _pad_kv_to(ks, CL).astype(cache["k"].dtype)
+        cache["v"] = _pad_kv_to(vs, CL).astype(cache["v"].dtype)
+        cache["pos"] = jnp.broadcast_to(_prefill_positions(S, CL),
+                                        cache["pos"].shape)
+        return cache, logits
+
+    if cfg.is_encdec:
+        enc_out = _whisper_encode(p, cfg, batch["frames"])
+        hs = embed_tokens(p, cfg, tokens) + \
+            sinusoidal_positions(S, cfg.d_model)[None]
+        enc_pos = jnp.arange(cfg.enc_seq)
+
+        def body(x, blk):
+            a, (k, v) = attention(blk["self_attn"], rms_norm(blk["ln1"], x), cfg,
+                                  positions=positions,
+                                  use_rope=False, return_kv=True)
+            x = x + a
+            ck = linear(blk["cross_attn"]["wk"], enc_out, cfg)
+            cv = linear(blk["cross_attn"]["wv"], enc_out, cfg)
+            Se = enc_out.shape[1]
+            ck = ck.reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+            cv = cv.reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+            x = x + attention(blk["cross_attn"], rms_norm(blk["ln2"], x), cfg,
+                              positions=positions, k_positions=enc_pos,
+                              kind="full", kv=(ck, cv), use_rope=False)
+            x = x + ffn(blk["ffn"], rms_norm(blk["ln3"], x), cfg)
+            return x, (k, v, ck, cv)
+
+        hs, (ks, vs, cks, cvs) = jax.lax.scan(body, hs, p["dec_blocks"])
+        logits = final_logits(hs)
+        cache["k"] = _pad_kv_to(ks, CL).astype(cache["k"].dtype)
+        cache["v"] = _pad_kv_to(vs, CL).astype(cache["v"].dtype)
+        cache["cross_k"] = cks.astype(cache["cross_k"].dtype)
+        cache["cross_v"] = cvs.astype(cache["cross_v"].dtype)
+        cache["pos"] = jnp.broadcast_to(_prefill_positions(S, CL), cache["pos"].shape)
+        return cache, logits
+
+    if cfg.block_pattern == "zamba2":
+        g = cfg.attn_every
+        groups = cfg.n_layers // g
+        stacked = jax.tree.map(lambda x: x.reshape(groups, g, *x.shape[1:]),
+                               p["mamba_blocks"])
+        shared = p["shared_attn"]
+        hs = embed_tokens(p, cfg, tokens)
+
+        def mamba_body(x, blk):
+            hn = rms_norm(blk["ln"], x)
+            y, (state, conv) = ssm.mamba2_block(blk["mixer"], hn, cfg)
+            return x + y, (state, conv)
+
+        def group_body(x, blks):
+            x, (states, convs) = jax.lax.scan(mamba_body, x, blks)
+            hn = rms_norm(shared["ln1"], x)
+            a, (k, v) = attention(shared["attn"], hn, cfg, positions=positions,
+                                  window=cfg.window, return_kv=True)
+            x = x + a
+            x = x + ffn(shared["ffn"], rms_norm(shared["ln2"], x), cfg)
+            return x, (states, convs, k, v)
+
+        hs, (states, convs, ks, vs) = jax.lax.scan(group_body, hs, stacked)
+        logits = final_logits(hs)
+        cache["ssm"] = states.reshape(cfg.n_layers, *states.shape[2:])
+        cache["conv"] = convs.reshape(cfg.n_layers, *convs.shape[2:]).astype(cache["conv"].dtype)
+        cache["k"] = _pad_kv_to(ks, CL).astype(cache["k"].dtype)
+        cache["v"] = _pad_kv_to(vs, CL).astype(cache["v"].dtype)
+        cache["pos"] = jnp.broadcast_to(_prefill_positions(S, CL), cache["pos"].shape)
+        return cache, logits
+
+    if cfg.block_pattern == "xlstm":
+        hs = embed_tokens(p, cfg, tokens)
+
+        def body(x, blks):
+            mblk, sblk = blks
+            y, (C, n, m) = xlstm.mlstm_block(mblk["cell"], rms_norm(mblk["ln"], x), cfg)
+            x = x + y
+            y, (sc, sn, sh, sm) = xlstm.slstm_block(sblk["cell"],
+                                                    rms_norm(sblk["ln"], x), cfg)
+            return x + y, (C, n, m, sc, sn, sh, sm)
+
+        hs, (C, n, m, sc, sn, sh, sm) = jax.lax.scan(
+            body, hs, (p["mlstm_blocks"], p["slstm_blocks"]))
+        logits = final_logits(hs)
+        cache.update(mC=C, mn=n, mm=m, sc=sc, sn=sn, sh=sh, sm=sm)
+        return cache, logits
+
+    raise ValueError(cfg.block_pattern)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(p: Params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
+                index: jax.Array):
+    """One decode step.  tokens: [B]; index: scalar int32 (current position).
+
+    Returns (logits [B, V], new_cache).
+    """
+    B = tokens.shape[0]
+    CL = cache["pos"].shape[-1] if "pos" in cache else 0
+    slot = (index % CL) if (cfg.window and CL) else index
+    positions = index[None].astype(jnp.int32) if hasattr(index, "shape") else jnp.asarray([index], jnp.int32)
+    h = embed_tokens(p, cfg, tokens[:, None])
+
+    if cfg.is_encdec:
+        h = h + sinusoidal_position_at(index, cfg.d_model, h.dtype)[None, None]
+        new_pos = cache["pos"].at[:, slot].set(index)
+        kpos = new_pos[0]
+        enc_pos = jnp.arange(cfg.enc_seq)
+
+        def body(x, xs):
+            blk, ck, cv, crk, crv = xs
+            a, (ck, cv) = attention(blk["self_attn"], rms_norm(blk["ln1"], x), cfg,
+                                    positions=positions, k_positions=kpos,
+                                    window=cfg.window,
+                                    cache=(ck, cv), cache_index=slot, use_rope=False)
+            x = x + a
+            x = x + attention(blk["cross_attn"], rms_norm(blk["ln2"], x), cfg,
+                              positions=positions, k_positions=enc_pos, kind="full",
+                              kv=(crk, crv), use_rope=False)
+            x = x + ffn(blk["ffn"], rms_norm(blk["ln3"], x), cfg)
+            return x, (ck, cv)
+
+        h, (ks, vs) = jax.lax.scan(
+            body, h, (p["dec_blocks"], cache["k"], cache["v"],
+                      cache["cross_k"], cache["cross_v"]))
+        cache = dict(cache, k=ks, v=vs, pos=new_pos)
+
+    elif cfg.block_pattern == "attn":
+        new_pos = cache["pos"].at[:, slot].set(index)
+        kpos = new_pos[0]
+
+        def block_step(x, blk, ck, cv, is_moe):
+            hn = rms_norm(blk["ln1"], x, offset=cfg.rmsnorm_offset)
+            a, (ck, cv) = attention(blk["attn"], hn, cfg, positions=positions,
+                                    k_positions=kpos, window=cfg.window,
+                                    cache=(ck, cv), cache_index=slot)
+            x = x + a
+            hn = rms_norm(blk["ln2"], x, offset=cfg.rmsnorm_offset)
+            if is_moe:
+                f, _ = moe_ffn(blk["moe"], hn, cfg)
+            else:
+                f = ffn(blk["ffn"], hn, cfg)
+            return x + f, ck, cv
+
+        if "dense_blocks" in p:  # interleaved MoE
+            kk = cfg.moe_every
+            groups = cfg.n_layers // kk
+            dense = jax.tree.map(lambda t: t.reshape(groups, kk - 1, *t.shape[1:]),
+                                 p["dense_blocks"])
+            ckg = cache["k"].reshape(groups, kk, *cache["k"].shape[1:])
+            cvg = cache["v"].reshape(groups, kk, *cache["v"].shape[1:])
+
+            def group_body(x, xs):
+                dblk, mblk, ck, cv = xs
+
+                def dbody(xx, ys):
+                    b, k1, v1 = ys
+                    xx, k1, v1 = block_step(xx, b, k1, v1, False)
+                    return xx, (k1, v1)
+
+                x, (kd, vd) = jax.lax.scan(dbody, x, (dblk, ck[:kk - 1], cv[:kk - 1]))
+                x, km, vm = block_step(x, mblk, ck[kk - 1], cv[kk - 1], True)
+                return x, (jnp.concatenate([kd, km[None]], 0),
+                           jnp.concatenate([vd, vm[None]], 0))
+
+            h, (ks, vs) = jax.lax.scan(group_body, h,
+                                       (dense, p["moe_blocks"], ckg, cvg))
+            ks = ks.reshape(cache["k"].shape)
+            vs = vs.reshape(cache["v"].shape)
+        else:
+            # Read-only cache in the layer loop: attend over the OLD cache
+            # and merge the just-computed token as one extra online-softmax
+            # chunk; new k/v come out as tiny scan ys and are written with a
+            # single batched DUS after the loop.  Mutating the carried cache
+            # inside the loop makes XLA insert full-cache copies (+f32
+            # mirrors on backends that upcast bf16 dots) — measured 17
+            # GB/layer on gemma-7b decode_32k (EXPERIMENTS.md §Perf it.3).
+            from repro.models.layers import _sdpa, linear as _lin, rope as _rope
+            old_pos = cache["pos"][0]  # pre-update slot positions (-1 = empty)
+
+            def body(x, xs):
+                blk, ck, cv = xs
+                B = x.shape[0]
+                hn = rms_norm(blk["ln1"], x, offset=cfg.rmsnorm_offset)
+                q = _lin(blk["attn"]["wq"], hn, cfg).reshape(B, 1, cfg.n_heads,
+                                                             cfg.head_dim)
+                k = _lin(blk["attn"]["wk"], hn, cfg).reshape(B, 1, cfg.n_kv_heads,
+                                                             cfg.head_dim)
+                v = _lin(blk["attn"]["wv"], hn, cfg).reshape(B, 1, cfg.n_kv_heads,
+                                                             cfg.head_dim)
+                if cfg.qk_norm:
+                    q = rms_norm(blk["attn"]["q_norm"], q)
+                    k = rms_norm(blk["attn"]["k_norm"], k)
+                q = _rope(q, positions, cfg.rope_theta)
+                k = _rope(k, positions, cfg.rope_theta)
+                o = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), cfg,
+                          q_pos=positions, k_pos=old_pos, window=cfg.window,
+                          extra_kv=(k, v, positions))
+                x = x + _lin(blk["attn"]["wo"], o, cfg)
+                hn = rms_norm(blk["ln2"], x, offset=cfg.rmsnorm_offset)
+                if cfg.n_experts:
+                    f, _ = moe_ffn(blk["moe"], hn, cfg)
+                else:
+                    f = ffn(blk["ffn"], hn, cfg)
+                return x + f, (k, v)
+
+            h, (k_new, v_new) = jax.lax.scan(
+                body, h, (p["blocks"], cache["k"], cache["v"]))
+            # one batched in-place write: all layers' new tokens at `slot`
+            ks = jax.lax.dynamic_update_slice(
+                cache["k"], k_new.astype(cache["k"].dtype), (0, 0, slot, 0, 0))
+            vs = jax.lax.dynamic_update_slice(
+                cache["v"], v_new.astype(cache["v"].dtype), (0, 0, slot, 0, 0))
+        cache = dict(cache, k=ks, v=vs, pos=new_pos)
+
+    elif cfg.block_pattern == "zamba2":
+        g = cfg.attn_every
+        groups = cfg.n_layers // g
+        new_pos = cache["pos"].at[:, slot].set(index)
+        kpos = new_pos[0]
+        stacked = jax.tree.map(lambda x: x.reshape(groups, g, *x.shape[1:]),
+                               p["mamba_blocks"])
+        sst = cache["ssm"].reshape(groups, g, *cache["ssm"].shape[1:])
+        cst = cache["conv"].reshape(groups, g, *cache["conv"].shape[1:])
+        shared = p["shared_attn"]
+
+        def mamba_body(x, xs):
+            blk, st, cv = xs
+            hn = rms_norm(blk["ln"], x)
+            y, (st, cv) = ssm.mamba2_block(blk["mixer"], hn, cfg,
+                                           state=st, conv_state=cv)
+            return x + y, (st, cv)
+
+        def group_body(x, xs):
+            blks, st, cv, ck, cvv = xs
+            x, (st, cv) = jax.lax.scan(mamba_body, x, (blks, st, cv))
+            hn = rms_norm(shared["ln1"], x)
+            a, (ck, cvv) = attention(shared["attn"], hn, cfg, positions=positions,
+                                     k_positions=kpos, window=cfg.window,
+                                     cache=(ck, cvv), cache_index=slot)
+            x = x + a
+            x = x + ffn(shared["ffn"], rms_norm(shared["ln2"], x), cfg)
+            return x, (st, cv, ck, cvv)
+
+        h, (st, cv, ks, vs) = jax.lax.scan(
+            group_body, h, (stacked, sst, cst, cache["k"], cache["v"]))
+        cache = dict(cache, ssm=st.reshape(cache["ssm"].shape),
+                     conv=cv.reshape(cache["conv"].shape), k=ks, v=vs, pos=new_pos)
+
+    elif cfg.block_pattern == "xlstm":
+        def body(x, xs):
+            mblk, sblk, C, n, m, sc, sn, sh, sm = xs
+            y, (C, n, m) = xlstm.mlstm_block(mblk["cell"], rms_norm(mblk["ln"], x),
+                                             cfg, state=(C, n, m), decode=True)
+            x = x + y
+            y, (sc, sn, sh, sm) = xlstm.slstm_block(
+                sblk["cell"], rms_norm(sblk["ln"], x), cfg, state=(sc, sn, sh, sm))
+            return x + y, (C, n, m, sc, sn, sh, sm)
+
+        h, (C, n, m, sc, sn, sh, sm) = jax.lax.scan(
+            body, h, (p["mlstm_blocks"], p["slstm_blocks"], cache["mC"],
+                      cache["mn"], cache["mm"], cache["sc"], cache["sn"],
+                      cache["sh"], cache["sm"]))
+        cache = dict(cache, mC=C, mn=n, mm=m, sc=sc, sn=sn, sh=sh, sm=sm)
+    else:
+        raise ValueError(cfg.block_pattern)
+
+    h = rms_norm(p["final_norm"], h, offset=cfg.rmsnorm_offset)
+    logits = (h[:, 0] @ lm_head_w(p, cfg)).astype(jnp.float32)
+    from repro.models.layers import mask_padded_vocab
+    return mask_padded_vocab(logits, cfg.vocab_size), cache

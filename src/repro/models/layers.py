@@ -1,0 +1,430 @@
+"""Shared neural blocks: norms, RoPE, ternary-aware linears, GQA attention,
+(Ge/Swi)GLU FFNs, MoE, and the chunked cross-entropy loss.
+
+Every projection goes through :func:`linear`, which dispatches on the
+parameter leaf structure:
+
+  * ``{"w": [in, out]}``               — fp or QAT (BitNet STE) training path
+  * ``{"packed": [out, in/5], "scale"}`` — 1.6-bit base-3 deployment path
+
+so the same model code serves training (fake-quant master weights) and
+serving (streamed packed ternary weights).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding
+from repro.core.quantization import fake_quant_acts, fake_quant_ternary
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.bfloat16, scale: float | None = None,
+                stack: tuple[int, ...] = ()) -> Params:
+    scale = 1.0 / math.sqrt(d_in) if scale is None else scale
+    p = {"w": jax.random.normal(key, (*stack, d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((*stack, d_out), dtype)
+    return p
+
+
+def init_norm(d: int, *, dtype=jnp.bfloat16, stack: tuple[int, ...] = ()) -> Params:
+    return {"g": jnp.ones((*stack, d), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# primitive ops
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(p: Params, x: jax.Array, *, offset: bool = False, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    g = p["g"].astype(jnp.float32)
+    if offset:
+        g = 1.0 + g
+    return (x * g).astype(dt)
+
+
+def linear(p: Params, x: jax.Array, cfg: ModelConfig, *, ternary: bool = True):
+    """Apply a (possibly ternary) linear layer.  See module docstring."""
+    if "packed" in p:
+        n = x.shape[-1]
+        w_t = encoding.unpack_base3(p["packed"], n)  # [out, in]
+        y = jnp.einsum("...d,od->...o", x, w_t.astype(x.dtype))
+        y = y * p["scale"].astype(y.dtype)
+    else:
+        w = p["w"]
+        if ternary and cfg.quant == "qat":
+            w = fake_quant_ternary(w)
+            if cfg.quantize_acts:
+                x = fake_quant_acts(x)
+        y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float):
+    """Rotary embedding.  x: [B, S, H, hd]; positions: [B, S] or [S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, half]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda v: jax.nn.gelu(v, approximate=True)}[name]
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, *, stack=()) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = jnp.bfloat16
+    p = {
+        "wq": init_linear(ks[0], cfg.d_model, cfg.q_dim, bias=cfg.qkv_bias, dtype=dt, stack=stack),
+        "wk": init_linear(ks[1], cfg.d_model, cfg.kv_dim, bias=cfg.qkv_bias, dtype=dt, stack=stack),
+        "wv": init_linear(ks[2], cfg.d_model, cfg.kv_dim, bias=cfg.qkv_bias, dtype=dt, stack=stack),
+        "wo": init_linear(ks[3], cfg.q_dim, cfg.d_model, dtype=dt, stack=stack),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(cfg.head_dim, stack=stack)
+        p["k_norm"] = init_norm(cfg.head_dim, stack=stack)
+    return p
+
+
+def _chunk_mask(qp: jax.Array, kp: jax.Array, kind: str, window: int):
+    """[qc, kc] bool validity from absolute positions (kp = -1 ⇒ empty slot)."""
+    valid = kp[None, :] >= 0
+    if kind == "causal":
+        valid &= kp[None, :] <= qp[:, None]
+        if window:
+            valid &= kp[None, :] > qp[:, None] - window
+    return valid
+
+
+def _sdpa(q, k, v, cfg: ModelConfig, *, q_pos, k_pos, kind: str = "causal",
+          window: int = 0, chunk_q: int = 512, chunk_k: int = 1024,
+          extra_kv=None):
+    """Flash-style chunked attention with online softmax.
+
+    q: [B,Sq,H,hd]; k/v: [B,Sk,Hkv,hd]; q_pos [Sq], k_pos [Sk] absolute
+    positions (k_pos = -1 marks empty cache slots).  Memory is
+    O(B·H·chunk_q·chunk_k) instead of O(B·H·Sq·Sk) — required for the 32k/500k
+    shapes to fit HBM; on real TPU this is where a fused flash kernel slots
+    in.  ``kind``: "causal" (+optional sliding window) or "full" (cross-attn).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    cq, ck = min(chunk_q, Sq), min(chunk_k, Sk)
+    pad_q, pad_k = (-Sq) % cq, (-Sk) % ck
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad_q))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad_k), constant_values=-1)
+    nq, nk = (Sq + pad_q) // cq, (Sk + pad_k) // ck
+    scale = 1.0 / math.sqrt(hd)
+
+    # Chunks are taken with dynamic_slice on the *native* [B, S, H, hd]
+    # layout.  A reshape(B, nk, ck, ...).transpose(...) formulation makes XLA
+    # materialize a transposed copy of the whole K/V buffer (and on backends
+    # without native bf16 dots, hoist a second full-size f32 upcast of it out
+    # of the loop — measured +15 GB/step on the gemma-7b decode_32k cell, see
+    # EXPERIMENTS.md §Perf).  Slicing keeps per-step traffic at one chunk.
+    def q_chunk(_, qi):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * cq, cq, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, qi * cq, cq, axis=0)
+        qb = qb.reshape(B, cq, Hkv, rep, hd)
+
+        def merge_chunk(carry, kb, vb, kp):
+            m, l, acc = carry
+            s = jnp.einsum("bqkrd,bskd->bkrqs", qb, kb).astype(jnp.float32) * scale
+            valid = _chunk_mask(qp, kp, kind, window)
+            s = jnp.where(valid[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkrqs,bskd->bkrqd", p.astype(vb.dtype), vb).astype(jnp.float32)
+            return (m_new, l, acc)
+
+        def kv_step(carry, ki):
+            kb = jax.lax.dynamic_slice_in_dim(k, ki * ck, ck, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, ki * ck, ck, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(k_pos, ki * ck, ck, axis=0)
+            return merge_chunk(carry, kb, vb, kp), None
+
+        init = (jnp.full((B, Hkv, rep, cq), -1e30, jnp.float32),
+                jnp.zeros((B, Hkv, rep, cq), jnp.float32),
+                jnp.zeros((B, Hkv, rep, cq, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        if extra_kv is not None:
+            # one more online-softmax chunk (decode: the token being written
+            # this step, so the cache stays read-only inside the layer loop)
+            k1, v1, p1 = extra_kv
+            m, l, acc = merge_chunk((m, l, acc), k1.astype(qb.dtype),
+                                    v1.astype(qb.dtype), p1)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # [B, Hkv, rep, cq, hd]
+        return None, out.transpose(0, 3, 1, 2, 4)      # [B, cq, Hkv, rep, hd]
+
+    _, outs = jax.lax.scan(q_chunk, None, jnp.arange(nq))  # [nq, B, cq, ...]
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq + pad_q, H, hd)
+    return out[:, :Sq].reshape(B, Sq, H * hd).astype(v.dtype)
+
+
+def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
+              positions: jax.Array, k_positions: jax.Array | None = None,
+              kind: str = "causal", window: int = 0,
+              kv: tuple[jax.Array, jax.Array] | None = None,
+              cache: tuple[jax.Array, jax.Array] | None = None,
+              cache_index: jax.Array | None = None,
+              use_rope: bool = True, return_kv: bool = False):
+    """GQA attention (chunked-softmax core).
+
+    Training/prefill: ``kv=None, cache=None`` — keys/values from ``x``;
+                      ``k_positions`` defaults to ``positions``.
+    Cross-attention:  ``kv=(k, v)`` precomputed (whisper), ``kind="full"``.
+    Decode:           ``cache=(k_cache, v_cache)`` updated at ``cache_index``;
+                      ``k_positions`` = cache slot positions (-1 = empty);
+                      returns (out, new_cache).
+
+    ``positions``: [Sq] absolute query positions (1-D, shared over batch).
+    """
+    B, Sq, _ = x.shape
+    q = linear(p["wq"], x, cfg).reshape(B, Sq, cfg.n_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv is not None:
+        k, v = kv
+    else:
+        k = linear(p["wk"], x, cfg).reshape(B, Sq, cfg.n_kv_heads, cfg.head_dim)
+        v = linear(p["wv"], x, cfg).reshape(B, Sq, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            k = rms_norm(p["k_norm"], k)
+        if use_rope:
+            k = rope(k, positions, cfg.rope_theta)
+        if cache is not None:
+            ck, cv = cache
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+            k, v, new_cache = ck, cv, (ck, cv)
+
+    if k_positions is None:
+        k_positions = positions if cache is None else None
+        assert k_positions is not None, "decode requires explicit k_positions"
+    out = _sdpa(q, k.astype(q.dtype), v.astype(q.dtype), cfg,
+                q_pos=positions, k_pos=k_positions, kind=kind, window=window)
+    out = linear(p["wo"], out, cfg)
+    if return_kv:
+        return out, (k, v)
+    return (out, new_cache) if cache is not None else out
+
+
+# ---------------------------------------------------------------------------
+# FFN / MoE
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, cfg: ModelConfig, *, stack=(), d_ff: int | None = None) -> Params:
+    ks = jax.random.split(key, 3)
+    f = d_ff or cfg.d_ff
+    dt = jnp.bfloat16
+    p = {
+        "wi": init_linear(ks[0], cfg.d_model, f, dtype=dt, stack=stack),
+        "wo": init_linear(ks[2], f, cfg.d_model, dtype=dt, stack=stack),
+    }
+    if cfg.ffn_gated:
+        p["wg"] = init_linear(ks[1], cfg.d_model, f, dtype=dt, stack=stack)
+    return p
+
+
+def ffn(p: Params, x: jax.Array, cfg: ModelConfig):
+    """Gated FFN (SwiGLU/GeGLU) or plain 2-layer MLP (whisper)."""
+    if "wg" in p:
+        h = _act(cfg.act_fn)(linear(p["wg"], x, cfg)) * linear(p["wi"], x, cfg)
+    else:
+        h = _act(cfg.act_fn)(linear(p["wi"], x, cfg))
+    return linear(p["wo"], h, cfg)
+
+
+def init_moe(key, cfg: ModelConfig, *, stack=()) -> Params:
+    ks = jax.random.split(key, 5)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    dt = jnp.bfloat16
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "router": {"w": jax.random.normal(ks[0], (*stack, d, E), jnp.float32) * s},
+        "wi": {"w": jax.random.normal(ks[1], (*stack, E, d, f), dt) * s},
+        "wg": {"w": jax.random.normal(ks[2], (*stack, E, d, f), dt) * s},
+        "wo": {"w": jax.random.normal(ks[3], (*stack, E, f, d), dt) * (1.0 / math.sqrt(f))},
+    }
+    if cfg.moe_shared_expert:
+        p["shared"] = init_ffn(ks[4], cfg, stack=stack)
+    return p
+
+
+def _maybe_quant_expert(w, cfg: ModelConfig):
+    """Per-expert fake-quant on stacked [E, din, dout] expert weights."""
+    if cfg.quant == "qat":
+        return fake_quant_ternary(w, axis=(-2, -1))
+    return w
+
+
+def _expert_matmul(leaf: Params, cfg: ModelConfig, d_in: int):
+    """Returns f: [E, C, d_in] → [E, C, d_out] for train ({"w"}) or packed
+    ({"packed" [E, d_out, d_in/5], "scale" [E]}) expert weights."""
+    if "packed" in leaf:
+        w_t = encoding.unpack_base3(leaf["packed"], d_in)  # [E, d_out, d_in]
+        scale = leaf["scale"]
+
+        def f(t):
+            y = jnp.einsum("ecd,efd->ecf", t, w_t.astype(t.dtype))
+            return y * scale[:, None, None].astype(y.dtype)
+
+        return f
+    w = _maybe_quant_expert(leaf["w"], cfg)
+    return lambda t: jnp.einsum("ecd,edf->ecf", t, w.astype(t.dtype))
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig):
+    """Top-k token-choice MoE with **sort-based dispatch** (scalable form).
+
+    The textbook GShard one-hot dispatch costs O(T·E·cap) and detonates at
+    T ≈ 1M tokens (the llama4 train_4k cell measured 12.9 TB/device of XLA
+    temps).  This implementation sorts token-expert assignments and uses
+    linear gather/scatter instead:
+
+      sort (T·K ids) → per-expert slot via counts/offsets → scatter tokens
+      into [E, cap, D] → batched expert matmuls → gather back with gates.
+
+    All dispatch traffic is O(T·D); the EP all-to-all emerges from the
+    scatter/gather when experts are sharded on the data axis.  Returns
+    (out, aux_loss); router stays fp, experts ternary (QAT or packed).
+    """
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.experts_per_token
+    xf = x.reshape(T, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # [T, K]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * Σ_e f_e · p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    cap = max(int(cfg.capacity_factor * T * K / E), 1)
+    flat_e = gate_idx.reshape(T * K)                                # [TK]
+    order = jnp.argsort(flat_e, stable=True)                        # [TK]
+    sorted_e = flat_e[order]
+    tok_of = order // K
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    start = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                             jnp.cumsum(counts)[:-1]])
+    slot = jnp.arange(T * K, dtype=jnp.int32) - start[sorted_e]     # pos in expert
+    keep = slot < cap
+    # scatter into expert buffers; dropped tokens target the sentinel row
+    flat_idx = jnp.where(keep, sorted_e * cap + slot, E * cap)
+    buf = jnp.zeros((E * cap + 1, D), xf.dtype).at[flat_idx].set(
+        xf[tok_of], mode="drop")
+    disp = buf[:-1].reshape(E, cap, D)
+
+    up_i = _expert_matmul(p["wi"], cfg, D)
+    up_g = _expert_matmul(p["wg"], cfg, D)
+    down = _expert_matmul(p["wo"], cfg, cfg.d_ff)
+    h = _act(cfg.act_fn)(up_g(disp)) * up_i(disp)
+    eout = down(h).reshape(E * cap, D)                              # [E·cap, D]
+
+    gathered = jnp.where(keep[:, None], eout[jnp.minimum(flat_idx, E * cap - 1)], 0)
+    gates_sorted = gate_vals.reshape(T * K)[order].astype(xf.dtype)
+    out = jnp.zeros((T, D), xf.dtype).at[tok_of].add(gathered * gates_sorted[:, None])
+    out = out.reshape(B, S, D)
+    if "shared" in p:
+        out = out + ffn(p["shared"], x, cfg)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def mask_padded_vocab(logits: jax.Array, vocab: int) -> jax.Array:
+    """-inf out the vocab-padding tail (see ModelConfig.padded_vocab)."""
+    if logits.shape[-1] == vocab:
+        return logits
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(iota < vocab, logits, -1e30)
+
+
+def chunked_ce_loss(x: jax.Array, head_w: jax.Array, labels: jax.Array,
+                    mask: jax.Array, chunk: int, vocab: int | None = None):
+    """Next-token CE without materializing [B, S, V] logits.
+
+    Scans over sequence chunks; each chunk projects to the vocab, computes
+    log-softmax CE, and is rematerialized in backward (jax.checkpoint), so
+    peak memory is one [B, chunk, V] slab.
+    """
+    B, S, D = x.shape
+    vocab = vocab or head_w.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = (S + pad) // chunk
+    xc = x.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    yc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        xcb, ycb, mcb = inp
+        logits = (xcb @ head_w).astype(jnp.float32)  # [B, chunk, Vpad]
+        logits = mask_padded_vocab(logits, vocab)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, ycb[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * mcb
+        return (carry[0] + nll.sum(), carry[1] + mcb.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)), (xc, yc, mc))
+    return tot / jnp.clip(cnt, 1.0)

@@ -1,0 +1,343 @@
+"""Top-level model API: init / train forward / prefill / decode for every
+assigned architecture family.
+
+All families share one parameter layout convention — per-layer leaves stacked
+on a leading layer axis and consumed by ``lax.scan`` (keeps HLO size constant
+in depth; essential for compiling 60-layer × 512-device meshes). The paper's
+ternary technique enters through ``layers.linear`` (QAT fake-quant in
+training, packed 1.6-bit streaming at serving — see quantize_for_serving).
+
+Families:
+  * ``attn``   — dense / GQA / MoE decoder-only LMs (+ VLM prefix injection)
+  * ``zamba2`` — Mamba2 backbone with a shared attention block every k layers
+  * ``xlstm``  — alternating mLSTM / sLSTM blocks
+  * enc-dec    — whisper (audio stub frontend + text decoder w/ cross-attn)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding
+from repro.core.quantization import ternarize
+from repro.models import ssm, xlstm
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    attention,
+    chunked_ce_loss,
+    ffn,
+    init_attention,
+    init_ffn,
+    init_moe,
+    init_norm,
+    linear,
+    moe_ffn,
+    rms_norm,
+)
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    ks = iter(jax.random.split(key, 16))
+    dt = jnp.bfloat16
+    V = cfg.padded_vocab
+    p: Params = {
+        "embed": {"w": jax.random.normal(next(ks), (V, cfg.d_model), dt) * 0.02},
+        "final_norm": init_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {"w": jax.random.normal(next(ks), (cfg.d_model, V), dt)
+                        * (1.0 / math.sqrt(cfg.d_model))}
+
+    if cfg.is_encdec:
+        L, Le = cfg.n_layers, cfg.enc_layers
+        p["enc_blocks"] = {
+            "ln1": init_norm(cfg.d_model, stack=(Le,)),
+            "attn": init_attention(next(ks), cfg, stack=(Le,)),
+            "ln2": init_norm(cfg.d_model, stack=(Le,)),
+            "ffn": init_ffn(next(ks), cfg, stack=(Le,)),
+        }
+        p["enc_norm"] = init_norm(cfg.d_model)
+        p["dec_blocks"] = {
+            "ln1": init_norm(cfg.d_model, stack=(L,)),
+            "self_attn": init_attention(next(ks), cfg, stack=(L,)),
+            "ln2": init_norm(cfg.d_model, stack=(L,)),
+            "cross_attn": init_attention(next(ks), cfg, stack=(L,)),
+            "ln3": init_norm(cfg.d_model, stack=(L,)),
+            "ffn": init_ffn(next(ks), cfg, stack=(L,)),
+        }
+        return p
+
+    if cfg.block_pattern == "attn":
+        L = cfg.n_layers
+        if cfg.n_experts and cfg.moe_every > 1:
+            # interleaved: each group = (moe_every - 1) dense layers + 1 MoE
+            Lm = L // cfg.moe_every
+            Ld = L - Lm
+            p["dense_blocks"] = {
+                "ln1": init_norm(cfg.d_model, stack=(Ld,)),
+                "attn": init_attention(next(ks), cfg, stack=(Ld,)),
+                "ln2": init_norm(cfg.d_model, stack=(Ld,)),
+                "ffn": init_ffn(next(ks), cfg, stack=(Ld,),
+                                d_ff=cfg.dense_ff or cfg.d_ff),
+            }
+            p["moe_blocks"] = {
+                "ln1": init_norm(cfg.d_model, stack=(Lm,)),
+                "attn": init_attention(next(ks), cfg, stack=(Lm,)),
+                "ln2": init_norm(cfg.d_model, stack=(Lm,)),
+                "moe": init_moe(next(ks), cfg, stack=(Lm,)),
+            }
+            return p
+        blocks = {
+            "ln1": init_norm(cfg.d_model, stack=(L,)),
+            "attn": init_attention(next(ks), cfg, stack=(L,)),
+            "ln2": init_norm(cfg.d_model, stack=(L,)),
+        }
+        if cfg.n_experts:
+            blocks["moe"] = init_moe(next(ks), cfg, stack=(L,))
+        else:
+            blocks["ffn"] = init_ffn(next(ks), cfg, stack=(L,))
+        p["blocks"] = blocks
+    elif cfg.block_pattern == "zamba2":
+        L = cfg.n_layers
+        p["mamba_blocks"] = {
+            "ln": init_norm(cfg.d_model, stack=(L,)),
+            "mixer": ssm.init_mamba2(next(ks), cfg, stack=(L,)),
+        }
+        p["shared_attn"] = {
+            "ln1": init_norm(cfg.d_model),
+            "attn": init_attention(next(ks), cfg),
+            "ln2": init_norm(cfg.d_model),
+            "ffn": init_ffn(next(ks), cfg),
+        }
+    elif cfg.block_pattern == "xlstm":
+        half = cfg.n_layers // 2
+        p["mlstm_blocks"] = {
+            "ln": init_norm(cfg.d_model, stack=(half,)),
+            "cell": xlstm.init_mlstm(next(ks), cfg, stack=(half,)),
+        }
+        p["slstm_blocks"] = {
+            "ln": init_norm(cfg.d_model, stack=(half,)),
+            "cell": xlstm.init_slstm(next(ks), cfg, stack=(half,)),
+        }
+    else:
+        raise ValueError(cfg.block_pattern)
+    return p
+
+
+def lm_head_w(p: Params, cfg: ModelConfig):
+    return p["embed"]["w"].T if cfg.tie_embeddings else p["lm_head"]["w"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / frontends
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(p: Params, cfg: ModelConfig, tokens: jax.Array,
+                 vision_embeds: jax.Array | None = None) -> jax.Array:
+    h = p["embed"]["w"][tokens]  # [B, S, D]
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    if vision_embeds is not None and cfg.vision_tokens:
+        h = jax.lax.dynamic_update_slice(
+            h, vision_embeds.astype(h.dtype), (0, 0, 0))
+    return h
+
+
+def sinusoidal_position_at(index: jax.Array, D: int, dtype=jnp.bfloat16) -> jax.Array:
+    """Single-position sinusoidal embedding (decode path; index is traced)."""
+    div = jnp.exp(-math.log(10_000.0) * jnp.arange(0, D, 2, jnp.float32) / D)
+    ang = index.astype(jnp.float32) * div
+    pe = jnp.zeros((D,), jnp.float32)
+    pe = pe.at[0::2].set(jnp.sin(ang))
+    pe = pe.at[1::2].set(jnp.cos(ang))
+    return pe.astype(dtype)
+
+
+def sinusoidal_positions(S: int, D: int, dtype=jnp.bfloat16) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-math.log(10_000.0) * jnp.arange(0, D, 2, jnp.float32) / D)
+    pe = jnp.zeros((S, D), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill trunk)
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _attn_block(blk, x, cfg: ModelConfig, positions, window, *, is_moe: bool):
+    hn = rms_norm(blk["ln1"], x, offset=cfg.rmsnorm_offset)
+    x = x + attention(blk["attn"], hn, cfg, positions=positions, window=window)
+    hn = rms_norm(blk["ln2"], x, offset=cfg.rmsnorm_offset)
+    if is_moe:
+        f, aux = moe_ffn(blk["moe"], hn, cfg)
+    else:
+        f, aux = ffn(blk["ffn"], hn, cfg), jnp.zeros((), jnp.float32)
+    return x + f, aux
+
+
+def _attn_trunk(p, cfg: ModelConfig, h, positions, window):
+    zero = jnp.zeros((), jnp.float32)
+
+    if "dense_blocks" in p:  # interleaved MoE (llama4)
+        k = cfg.moe_every
+        groups = cfg.n_layers // k
+        dense = jax.tree.map(lambda t: t.reshape(groups, k - 1, *t.shape[1:]),
+                             p["dense_blocks"])
+
+        def dense_body(carry, blk):
+            x, aux = carry
+            x, a = _attn_block(blk, x, cfg, positions, window, is_moe=False)
+            return (x, aux + a), None
+
+        def group_body(carry, blks):
+            dblk, mblk = blks
+            carry, _ = jax.lax.scan(_maybe_remat(dense_body, cfg), carry, dblk)
+            x, aux = carry
+            x, a = _attn_block(mblk, x, cfg, positions, window, is_moe=True)
+            return (x, aux + a), None
+
+        # remat at the group level too: without it every group's MoE
+        # dispatch buffers stay live for backward (measured 586 GB/device on
+        # llama4 train_4k — see EXPERIMENTS.md §Perf iteration 2).
+        (h, aux), _ = jax.lax.scan(_maybe_remat(group_body, cfg), (h, zero),
+                                   (dense, p["moe_blocks"]))
+        return h, aux
+
+    def body(carry, blk):
+        x, aux = carry
+        x, a = _attn_block(blk, x, cfg, positions, window, is_moe=bool(cfg.n_experts))
+        return (x, aux + a), None
+
+    (h, aux), _ = jax.lax.scan(_maybe_remat(body, cfg), (h, zero), p["blocks"])
+    return h, aux
+
+
+def _zamba2_trunk(p, cfg: ModelConfig, h, positions, window):
+    g = cfg.attn_every
+    groups = cfg.n_layers // g
+    stacked = jax.tree.map(
+        lambda x: x.reshape(groups, g, *x.shape[1:]), p["mamba_blocks"])
+    shared = p["shared_attn"]
+
+    def mamba_body(x, blk):
+        hn = rms_norm(blk["ln"], x)
+        y, _ = ssm.mamba2_block(blk["mixer"], hn, cfg)
+        return x + y, None
+
+    def group_body(x, blks):
+        x, _ = jax.lax.scan(_maybe_remat(mamba_body, cfg), x, blks)
+        hn = rms_norm(shared["ln1"], x)
+        x = x + attention(shared["attn"], hn, cfg, positions=positions, window=window)
+        x = x + ffn(shared["ffn"], rms_norm(shared["ln2"], x), cfg)
+        return x, None
+
+    h, _ = jax.lax.scan(_maybe_remat(group_body, cfg), h, stacked)
+    return h, jnp.zeros((), jnp.float32)
+
+
+def _xlstm_trunk(p, cfg: ModelConfig, h):
+    def body(x, blks):
+        mblk, sblk = blks
+        y, _ = xlstm.mlstm_block(mblk["cell"], rms_norm(mblk["ln"], x), cfg)
+        x = x + y
+        y, _ = xlstm.slstm_block(sblk["cell"], rms_norm(sblk["ln"], x), cfg)
+        return x + y, None
+
+    h, _ = jax.lax.scan(_maybe_remat(body, cfg), h,
+                        (p["mlstm_blocks"], p["slstm_blocks"]))
+    return h, jnp.zeros((), jnp.float32)
+
+
+def _whisper_encode(p, cfg: ModelConfig, frames: jax.Array):
+    """frames: [B, enc_seq, D] precomputed stub embeddings (conv frontend is
+    a stub per the assignment)."""
+    S = frames.shape[1]
+    h = frames + sinusoidal_positions(S, cfg.d_model, frames.dtype)[None]
+    positions = jnp.arange(S)
+
+    def body(x, blk):
+        hn = rms_norm(blk["ln1"], x)
+        x = x + attention(blk["attn"], hn, cfg, positions=positions, kind="full",
+                          use_rope=False)
+        x = x + ffn(blk["ffn"], rms_norm(blk["ln2"], x), cfg)
+        return x, None
+
+    h, _ = jax.lax.scan(_maybe_remat(body, cfg), h, p["enc_blocks"])
+    return rms_norm(p["enc_norm"], h)
+
+
+def _whisper_dec_trunk(p, cfg: ModelConfig, h, enc_out, positions):
+    S = h.shape[1]
+    enc_pos = jnp.arange(enc_out.shape[1])
+
+    def body(x, blk):
+        x = x + attention(blk["self_attn"], rms_norm(blk["ln1"], x), cfg,
+                          positions=positions, use_rope=False)
+        k = linear(blk["cross_attn"]["wk"], enc_out, cfg)
+        v = linear(blk["cross_attn"]["wv"], enc_out, cfg)
+        B, Se = enc_out.shape[:2]
+        kv = (k.reshape(B, Se, cfg.n_kv_heads, cfg.head_dim),
+              v.reshape(B, Se, cfg.n_kv_heads, cfg.head_dim))
+        x = x + attention(blk["cross_attn"], rms_norm(blk["ln2"], x), cfg,
+                          positions=positions, k_positions=enc_pos, kind="full",
+                          kv=kv, use_rope=False)
+        x = x + ffn(blk["ffn"], rms_norm(blk["ln3"], x), cfg)
+        return x, None
+
+    h, _ = jax.lax.scan(_maybe_remat(body, cfg), h, p["dec_blocks"])
+    return h
+
+
+def forward(p: Params, cfg: ModelConfig, batch: dict, *, window: int | None = None):
+    """Training/prefill trunk → (hidden [B,S,D], aux_loss)."""
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+    win = cfg.window if window is None else window
+
+    if cfg.is_encdec:
+        enc_out = _whisper_encode(p, cfg, batch["frames"])
+        h = embed_tokens(p, cfg, tokens)
+        h = h + sinusoidal_positions(S, cfg.d_model, h.dtype)[None]
+        h = _whisper_dec_trunk(p, cfg, h, enc_out, positions)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        h = embed_tokens(p, cfg, tokens, batch.get("vision_embeds"))
+        if cfg.block_pattern == "attn":
+            h, aux = _attn_trunk(p, cfg, h, positions, win)
+        elif cfg.block_pattern == "zamba2":
+            h, aux = _zamba2_trunk(p, cfg, h, positions, win)
+        elif cfg.block_pattern == "xlstm":
+            h, aux = _xlstm_trunk(p, cfg, h)
+        else:
+            raise ValueError(cfg.block_pattern)
+    return rms_norm(p["final_norm"], h, offset=cfg.rmsnorm_offset), aux
+
+
+def train_loss(p: Params, cfg: ModelConfig, batch: dict):
+    """Next-token CE (+ MoE aux).  batch: tokens, labels, loss_mask [+frontends]."""
+    h, aux = forward(p, cfg, batch)
+    loss = chunked_ce_loss(h, lm_head_w(p, cfg), batch["labels"],
+                           batch["loss_mask"].astype(jnp.float32),
+                           cfg.loss_chunk, vocab=cfg.vocab_size)
+    total = loss + 0.01 * aux
+    return total, {"ce": loss, "aux": aux}

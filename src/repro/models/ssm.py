@@ -1,0 +1,168 @@
+"""Mamba2 (SSD) blocks for the zamba2 hybrid architecture.
+
+Training uses the chunked SSD formulation (intra-chunk attention-like matmuls
++ a ``lax.scan`` over chunk states) so the recurrence is O(S) with
+MXU-friendly inner contractions; decode is the O(1) single-step state update.
+
+Simplifications vs the reference CUDA implementation (documented in
+DESIGN.md): separate z/x/B/C/dt projections instead of one fused in_proj
+(numerically equivalent modulo init), n_groups = 1.  The ternary technique
+applies to the large in/out projections; the small B/C/dt projections, conv,
+and gates stay fp — mirroring BitNet practice of keeping sub-1% parameter
+tensors in high precision.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, init_linear, init_norm, linear, rms_norm
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads, cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig, *, stack=()) -> Params:
+    d_in, H, S = ssm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    dt = jnp.bfloat16
+    conv_ch = d_in + 2 * S
+    return {
+        "wz": init_linear(ks[0], cfg.d_model, d_in, dtype=dt, stack=stack),
+        "wx": init_linear(ks[1], cfg.d_model, d_in, dtype=dt, stack=stack),
+        "wB": init_linear(ks[2], cfg.d_model, S, dtype=dt, stack=stack),
+        "wC": init_linear(ks[3], cfg.d_model, S, dtype=dt, stack=stack),
+        "wdt": init_linear(ks[4], cfg.d_model, H, dtype=dt, stack=stack),
+        "conv": jax.random.normal(ks[5], (*stack, cfg.ssm_conv, conv_ch), dt) * 0.1,
+        "A_log": jnp.zeros((*stack, H), jnp.float32),
+        "D": jnp.ones((*stack, H), jnp.float32),
+        "dt_bias": jnp.full((*stack, H), -2.0, jnp.float32),
+        "norm": init_norm(d_in, stack=stack),
+        "wo": init_linear(ks[6], d_in, cfg.d_model, dtype=dt, stack=stack),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv.  x: [B, S, C]; kernel: [K, C].
+
+    With ``state`` [B, K-1, C] (decode), returns (y, new_state)."""
+    K = kernel.shape[0]
+    if state is not None:
+        xin = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # [B, K-1+S, C]
+        new_state = xin[:, -(K - 1):]
+    else:
+        xin = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        new_state = None
+    y = sum(xin[:, i:i + x.shape[1]] * kernel[i] for i in range(K))
+    y = jax.nn.silu(y)
+    return (y, new_state) if state is not None else y
+
+
+def _ssd_chunked(u, B_in, C_in, log_a, chunk: int, h0=None):
+    """Chunked scalar-decay SSD scan.
+
+    u:     [B, S, H, P]  (dt-scaled inputs)
+    B_in:  [B, S, N]     input projections (shared across heads, n_groups=1)
+    C_in:  [B, S, N]     output projections
+    log_a: [B, S, H]     per-step log decays (<= 0)
+    h0:    optional [B, H, N, P] initial state.
+
+    Returns (y [B, S, H, P], h_final [B, H, N, P]).
+    """
+    Bb, S, H, P = u.shape
+    N = B_in.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:  # pad with zero input and zero decay (a=1 keeps state unchanged)
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B_in = jnp.pad(B_in, ((0, 0), (0, pad), (0, 0)))
+        C_in = jnp.pad(C_in, ((0, 0), (0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // chunk
+
+    def resh(t):
+        return t.reshape(Bb, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    uc, Bc, Cc, lac = map(resh, (u, B_in, C_in, log_a))  # leading nc
+
+    h_init = jnp.zeros((Bb, H, N, P), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def body(h, inp):
+        ucb, Bcb, Ccb, lacb = inp  # [B, Q, ...]
+        cs = jnp.cumsum(lacb, axis=1)                      # [B, Q, H] Σ_{j<=i}
+        total = cs[:, -1]                                  # [B, H]
+        # intra-chunk: scores[i, j] = (C_i·B_j)·exp(cs_i - cs_j), j <= i
+        scores = jnp.einsum("bin,bjn->bij", Ccb.astype(jnp.float32),
+                            Bcb.astype(jnp.float32))
+        decay = cs[:, :, None, :] - cs[:, None, :, :]       # [B, i, j, H]
+        iota = jnp.arange(ucb.shape[1])
+        causal = (iota[:, None] >= iota[None, :])[None, :, :, None]
+        gate = jnp.where(causal, jnp.exp(decay), 0.0)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", scores, gate,
+                             ucb.astype(jnp.float32))
+        # inter-chunk: y_i += C_i · h_prev · exp(cs_i)
+        y_inter = jnp.einsum("bin,bhnp,bih->bihp", Ccb.astype(jnp.float32), h,
+                             jnp.exp(cs))
+        # state update: h = exp(total)·h + Σ_j exp(total - cs_j) B_j u_j
+        carry_in = jnp.einsum("bjn,bjhp,bjh->bhnp", Bcb.astype(jnp.float32),
+                              ucb.astype(jnp.float32),
+                              jnp.exp(total[:, None] - cs))
+        h_new = jnp.exp(total)[:, :, None, None] * h + carry_in
+        return h_new, y_intra + y_inter
+
+    h_fin, yc = jax.lax.scan(body, h_init, (uc, Bc, Cc, lac))
+    y = yc.swapaxes(0, 1).reshape(Bb, S + pad, H, P)[:, :S]
+    return y, h_fin
+
+
+def mamba2_block(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                 state=None, conv_state=None, chunk: int = 128):
+    """Mamba2 mixer.  x: [B, S, D].
+
+    Training/prefill: state=None → full chunked SSD, returns (y, (h, conv)).
+    Decode: pass (state [B,H,N,P], conv_state [B,K-1,C]) with S == 1.
+    """
+    Bb, S, _ = x.shape
+    d_in, H, N = ssm_dims(cfg)
+    P = cfg.ssm_head_dim
+
+    z = linear(p["wz"], x, cfg)
+    xs = linear(p["wx"], x, cfg)
+    Bi = linear(p["wB"], x, cfg, ternary=False)
+    Ci = linear(p["wC"], x, cfg, ternary=False)
+    dt = linear(p["wdt"], x, cfg, ternary=False).astype(jnp.float32)
+
+    conv_in = jnp.concatenate([xs, Bi, Ci], axis=-1)
+    if conv_state is not None:
+        conv_out, new_conv = _causal_conv(conv_in, p["conv"], conv_state)
+    else:
+        conv_out = _causal_conv(conv_in, p["conv"])
+        new_conv = conv_in[:, -(cfg.ssm_conv - 1):] if S >= cfg.ssm_conv - 1 else None
+    xs, Bi, Ci = (conv_out[..., :d_in], conv_out[..., d_in:d_in + N],
+                  conv_out[..., d_in + N:])
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])                  # [B, S, H]
+    a = -jnp.exp(p["A_log"])                                 # [H]
+    log_a = dt * a                                           # [B, S, H]
+    u = (xs.reshape(Bb, S, H, P).astype(jnp.float32)) * dt[..., None]
+
+    if state is None:
+        y, h_fin = _ssd_chunked(u, Bi, Ci, log_a, chunk)
+    else:
+        # single-step recurrence (S == 1)
+        a_t = jnp.exp(log_a[:, 0])                           # [B, H]
+        h_fin = a_t[:, :, None, None] * state.astype(jnp.float32) + \
+            jnp.einsum("bn,bhp->bhnp", Bi[:, 0].astype(jnp.float32), u[:, 0])
+        y = jnp.einsum("bn,bhnp->bhp", Ci[:, 0].astype(jnp.float32), h_fin)[:, None]
+
+    # D skip connection on the (conv'd, un-scaled) inputs, per head
+    y = y + xs.reshape(Bb, S, H, P).astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bb, S, d_in).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z))
+    y = linear(p["wo"], y, cfg)
+    return y, (h_fin, new_conv)

@@ -1,0 +1,56 @@
+"""INT8 gradient compression with error feedback (distributed-optimization
+trick for bandwidth-bound all-reduce at 1000+ nodes).
+
+The quantize→all-reduce→dequantize cycle runs *inside* the jitted train step:
+gradients are quantized per-leaf to int8 with a per-leaf fp32 scale before
+the data-parallel mean, and the quantization residual is carried to the next
+step (error feedback keeps the scheme unbiased over time).  At 512 chips the
+gradient all-reduce bytes drop 4× vs fp32 / 2× vs bf16.
+
+This mirrors the paper's bandwidth thesis on the *training* side: when links,
+not FLOPs, bound the step time, narrower numbers win.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_leaf(g: jax.Array, err: jax.Array):
+    """(grad + carried error) → (int8 payload, scale, new error)."""
+    g32 = g.astype(jnp.float32) + err
+    scale = jnp.clip(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, g32 - deq
+
+
+def decompress_leaf(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params: Any):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads: Any, err_state: Any):
+    """Pytree version.  Returns (payload tree of (q, scale), new error)."""
+    out = jax.tree.map(compress_leaf, grads, err_state)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    s = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    e = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return (q, s), e
+
+
+def decompress_grads(payload) -> Any:
+    q, s = payload
+    return jax.tree.map(decompress_leaf, q, s)
+
+
+def roundtrip(grads: Any, err_state: Any):
+    """One compress→decompress cycle (what the all-reduce carries)."""
+    payload, err = compress_grads(grads, err_state)
+    return decompress_grads(payload), err

@@ -1,0 +1,165 @@
+"""Optimizers for ternary QAT at scale: AdamW and Adafactor, plus schedules.
+
+Functional (init/update) API with pytree states — no external deps.  Large
+archs (yi-34b, phi3.5-moe, llama4-maverick) default to **Adafactor** so the
+optimizer state fits the per-device HBM budget at 512 chips (DESIGN.md §4):
+factored second moments store O(rows + cols) instead of O(rows × cols), and
+no first moment is kept.  This is one of the framework's
+distributed-optimization levers; the other is gradient compression
+(optim/compression.py).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Any]
+    update: Callable[[Any, Params, Params, jax.Array], tuple[Params, Any]]
+    #: (param_specs, param_shapedtypes) → opt-state PartitionSpec tree, used
+    #: by the dry-run/train launchers to place state without compiling init.
+    state_specs: Callable[[Any, Any], Any] = None
+    name: str = ""
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (n + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), n
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = base_lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, warm,
+                         base_lr * 0.5 * (1 + jnp.cos(math.pi * t)))
+    return lr
+
+
+def adamw(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    """AdamW with fp32 master weights kept implicitly in the m/v moments'
+    precision (params stay bf16; update is computed in fp32)."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(state, grads, params, step):
+        c = state["count"] + 1
+        lr = lr_fn(step)
+
+        def upd(m, v, g, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / (1 - b1 ** c.astype(jnp.float32))
+            vh = v / (1 - b2 ** c.astype(jnp.float32))
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return m, v, (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        out = jax.tree.map(upd, state["m"], state["v"], grads, params)
+        m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_p = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"m": m, "v": v, "count": c}
+
+    def state_specs(param_specs, param_sds):
+        from jax.sharding import PartitionSpec as P
+        return {"m": param_specs, "v": param_specs, "count": P()}
+
+    return Optimizer(init=init, update=update, state_specs=state_specs, name="adamw")
+
+
+def adafactor(lr_fn, eps=1e-30, clip_threshold=1.0, decay=0.8,
+              weight_decay=0.0) -> Optimizer:
+    """Adafactor (factored second moments, no first moment) — O(rows+cols)
+    state for matrices, exact RMS for vectors/scalars."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros((*p.shape[:-2], p.shape[-1]), jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"s": jax.tree.map(st, params,
+                                  is_leaf=lambda x: not isinstance(x, dict)),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(state, grads, params, step):
+        c = state["count"] + 1
+        beta = 1.0 - (c.astype(jnp.float32)) ** (-decay)
+        lr = lr_fn(step)
+
+        def upd(s, g, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] / jnp.clip(vr.mean(-1)[..., None, None], eps)) \
+                    * vc[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.clip(denom, eps))
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.clip(v, eps))
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            newp = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+            return ns, newp.astype(p.dtype)
+
+        out = jax.tree.map(upd, state["s"], grads, params,
+                           is_leaf=lambda x: isinstance(x, dict) and
+                           ("vr" in x or "v" in x))
+        s = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_p = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"s": s, "count": c}
+
+    def state_specs(param_specs, param_sds):
+        from jax.sharding import PartitionSpec as P
+
+        def st(spec, sds):
+            dims = list(spec) + [None] * (sds.ndim - len(spec))
+            if sds.ndim >= 2:
+                return {"vr": P(*dims[:-1]), "vc": P(*(dims[:-2] + [dims[-1]]))}
+            return {"v": P(*dims)}
+
+        return {"s": jax.tree.map(st, param_specs, param_sds,
+                                  is_leaf=lambda x: isinstance(x, P)),
+                "count": P()}
+
+    return Optimizer(init=init, update=update, state_specs=state_specs,
+                     name="adafactor")
+
+
+def make_optimizer(name: str, base_lr: float = 3e-4, warmup: int = 100,
+                   total: int = 10_000) -> Optimizer:
+    lr_fn = cosine_schedule(base_lr, warmup, total)
+    if name == "adamw":
+        return adamw(lr_fn)
+    if name == "adafactor":
+        return adafactor(lr_fn)
+    raise ValueError(name)

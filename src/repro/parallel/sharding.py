@@ -1,0 +1,193 @@
+"""Logical sharding rules: parameter/optimizer/activation PartitionSpecs.
+
+Meshes (launch/mesh.py):
+  single-pod  (16, 16)    axes ("data", "model")
+  multi-pod   (2, 16, 16) axes ("pod", "data", "model")
+
+Policy (DESIGN.md §4):
+  * batch  → ("pod", "data")          (DP spans pods)
+  * TP     → "model" on head/FFN/vocab dims
+  * EP     → MoE expert dim on "data" (replicated across pods), TP inside
+  * layer-stack leading axes unsharded (consumed by lax.scan)
+  * non-divisible dims (yi-34b 56 heads / 16) rely on GSPMD padding
+
+Rules are name-based over the parameter tree paths, so any new module gets
+sane defaults (replicated) until a rule says otherwise.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+#: leaf keys whose last ("out") dim is tensor-parallel
+_OUT_MODEL = {"wq", "wk", "wv", "wi", "wg", "up", "wz", "wx", "ffn_up"}
+#: leaf keys whose first ("in") dim is tensor-parallel (out dim = d_model)
+_IN_MODEL = {"wo", "down", "ffn_down"}
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1) -> P:
+    """[B, ...] activations: batch over pod+data, rest replicated."""
+    return P(batch_axes(mesh), *([None] * extra_dims))
+
+
+def _param_spec(path: tuple[str, ...], ndim: int, mesh: Mesh,
+                tied_embed: bool = False) -> P:
+    names = set(path)
+    leaf = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+    has_data = "data" in mesh.axis_names
+
+    def pad(spec_tail: list):
+        """Right-align the spec against ndim (stack axes lead, unsharded)."""
+        lead = ndim - len(spec_tail)
+        return P(*([None] * lead + spec_tail))
+
+    # Embedding table: d_model-sharded normally; **vocab-sharded when tied**.
+    # A tied head (logits = x @ embed.T) with a d_model-sharded table puts the
+    # TP axis on the contraction dim → XLA all-reduces full f32 logits per
+    # loss chunk (measured 131 GB/step on gemma-7b train_4k — EXPERIMENTS.md
+    # §Perf cell 4).  Vocab sharding keeps logits vocab-sharded (tiny
+    # logsumexp all-reduce) at the cost of one [B,S,D] all-reduce in the
+    # token-embedding gather.
+    if "embed" in names:
+        if ndim != 2:
+            return P()
+        return P("model", None) if tied_embed else P(None, "model")
+    if "lm_head" in names:
+        return P(None, "model") if ndim == 2 else P()
+
+    # MoE experts: [L?, E, din, dout] — EP on data, TP inside expert
+    if "moe" in names and ndim >= 3 and leaf in ("w", "packed"):
+        ep = "data" if has_data else None
+        if leaf == "w":
+            tail = [ep, None, "model"] if parent in ("wi", "wg") else [ep, "model", None]
+        else:  # packed [L?, E, dout, din/5]
+            tail = [ep, "model", None] if parent in ("wi", "wg") else [ep, None, "model"]
+        return pad(tail)
+    if "router" in names:
+        return P()
+
+    if leaf == "b":  # biases follow their matrix's out dim
+        if parent in _OUT_MODEL:
+            return pad(["model"])
+        return P()
+    if leaf == "w":
+        if parent in _OUT_MODEL and ndim >= 2:
+            return pad([None, "model"])
+        if parent in _IN_MODEL and ndim >= 2:
+            return pad(["model", None])
+        return P()
+    if leaf == "packed":  # [..., dout, din/5]
+        if parent in _OUT_MODEL and ndim >= 2:
+            return pad(["model", None])
+        if parent in _IN_MODEL and ndim >= 2:
+            return pad([None, "model"])
+        return P()
+    # norms, scales, gates, conv, A_log, dt_bias, ... replicated
+    return P()
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+    return tuple(out)
+
+
+def _validate(spec: P, shape, mesh: Mesh) -> P:
+    """Drop any axis whose shard count does not divide the dim exactly —
+    jax.jit input shardings require even chunks.  Non-divisible dims (e.g.
+    yi-34b's 56 heads on a 16-way axis) fall back to replication on that dim;
+    internal GSPMD propagation may still shard them with padding."""
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for size, axes in zip(shape, dims):
+        if axes is None:
+            out.append(None)
+            continue
+        shards = 1
+        for a in (axes if isinstance(axes, tuple) else (axes,)):
+            shards *= mesh.shape[a]
+        out.append(axes if size % shards == 0 else None)
+    return P(*out)
+
+
+def param_specs(params: Any, mesh: Mesh):
+    """Pytree of PartitionSpec mirroring ``params``."""
+    tied = isinstance(params, dict) and "embed" in params and \
+        "lm_head" not in params
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: _validate(
+            _param_spec(_path_names(path), getattr(x, "ndim", 0), mesh,
+                        tied_embed=tied),
+            getattr(x, "shape", ()), mesh),
+        params)
+
+
+def param_shardings(params: Any, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs(params, mesh))
+
+
+def cache_specs(cache: Any, mesh: Mesh):
+    """KV/state caches.  KV is sharded on head_dim (not kv-heads: GQA kv=8
+    doesn't divide a 16-way model axis); SSM states on their (large) head
+    dim; batch over pod+data when divisible."""
+    ba = batch_axes(mesh)
+
+    def spec(path, x):
+        names = _path_names(path)
+        nd = x.ndim
+        leaf = names[-1] if names else ""
+        if leaf in ("k", "v", "cross_k", "cross_v") and nd == 5:
+            s = P(None, ba, None, None, "model")   # [L, B, S, Hkv, hd]
+        elif leaf == "pos":
+            s = P()
+        elif leaf == "ssm" and nd == 5:            # [L, B, H, N, P]
+            s = P(None, ba, "model", None, None)
+        elif leaf == "conv" and nd == 4:           # [L, B, K-1, C]
+            s = P(None, ba, None, "model")
+        elif leaf == "mC" and nd == 5:             # [half, B, H, dk, dv]
+            s = P(None, ba, None, "model", None)
+        elif leaf == "mn" and nd == 4:
+            s = P(None, ba, None, "model")
+        elif leaf == "mm" and nd == 3:
+            s = P(None, ba, None)
+        elif leaf in ("sc", "sn", "sh", "sm") and nd == 3:
+            s = P(None, ba, "model")
+        elif nd >= 2:
+            s = P(None, ba)
+        else:
+            s = P()
+        return _validate(s, x.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def batch_specs(batch: Any, mesh: Mesh):
+    """Input batches: shard dim 0 (batch) over pod+data when divisible
+    (long_500k has global_batch=1 → replicated; the data axis idles, which is
+    the correct execution for that workload)."""
+    ba = batch_axes(mesh)
+
+    def spec(x):
+        nd = getattr(x, "ndim", 0)
+        if nd == 0:
+            return P()
+        return _validate(P(ba, *([None] * (nd - 1))), x.shape, mesh)
+
+    return jax.tree.map(spec, batch)
+
+
+def to_shardings(tree_specs: Any, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda s: isinstance(s, P))

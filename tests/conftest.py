@@ -1,0 +1,19 @@
+import os
+
+# Tests run on the single real CPU device (the 512-device dry-run sets its
+# own XLA_FLAGS in repro.launch.dryrun, never globally).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

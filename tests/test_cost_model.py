@@ -1,0 +1,101 @@
+"""Analytical cost model (§IV) against the paper's published results."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core import dse
+
+
+def area(mu, n, m, dt):
+    return cm.area_gates_lut(mu, n, m, cm.get_coeffs(dt))
+
+
+def test_optimal_mu_fp16_is_3():
+    """Fig. 5/6b: 32×32 FP16 optimum at mu=3."""
+    assert cm.optimal_mu(32, 32, "fp16") == 3
+
+
+def test_table_iv_ratios():
+    """Table IV: dequant 2.23×, sign-flip 1.64× vs LUT(mu=3) @32×32 FP16."""
+    c = cm.get_coeffs("fp16")
+    lut = area(3, 32, 32, "fp16")
+    assert cm.area_gates_dequant_baseline(32, 32, c) / lut == pytest.approx(2.23, rel=0.05)
+    assert cm.area_gates_signflip_baseline(32, 32, c) / lut == pytest.approx(1.64, rel=0.05)
+
+
+def test_table_iv_absolute_area():
+    """Table IV anchor: 0.120 mm² for the 32×32 FP16 mu=3 core."""
+    assert cm.lut_core_area_mm2(3, 32, 32, "fp16") == pytest.approx(0.120, rel=0.01)
+
+
+def test_table_v_absolute_area():
+    """Table V anchor: (L,mu,K)=(34,2,30) INT8 @16nm → 33 125 µm²."""
+    p = dse.DesignPoint(mu=2, L=34, K=30, dtype="int8")
+    assert p.area_um2() == pytest.approx(33_125, rel=0.01)
+
+
+def test_int8_lut_benefit_minimal():
+    """Fig. 6a / §V-C: LUT benefit for INT8 is minimal (mu=1 close to opt)."""
+    areas = {mu: area(mu, 32, 32, "int8") for mu in (1, 2, 3)}
+    opt = min(areas.values())
+    assert areas[1] / opt < 1.2
+    assert cm.optimal_mu(32, 32, "int8") in (1, 2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([8, 16, 32, 48, 64, 96]), st.sampled_from(["fp16", "int8"]))
+def test_density_monotone_in_tile_size(t, dt):
+    """Fig. 7: TOPS/mm² improves monotonically with core size."""
+    mu = cm.optimal_mu(t, t, dt, mu_range=[m for m in (1, 2, 3, 4) if t % m == 0])
+    bigger = 2 * t
+    mu2 = cm.optimal_mu(bigger, bigger, dt,
+                        mu_range=[m for m in (1, 2, 3, 4) if bigger % m == 0])
+    assert cm.tops_per_mm2(mu2, bigger, bigger, dt) >= cm.tops_per_mm2(mu, t, t, dt)
+
+
+def test_fig8_geometry_directions():
+    """FP16 optimum elongates toward K > L·mu; INT8 toward L·mu > K."""
+    g_fp = dse.optimal_geometry(1024, "fp16")
+    g_i8 = dse.optimal_geometry(1024, "int8")
+    assert g_fp.m > g_fp.n
+    assert g_i8.n > g_i8.m
+
+
+def test_eq10_overhead_terms_vanish():
+    """Eq. 10: area/throughput decreases in both n and m."""
+    c = cm.get_coeffs("fp16")
+    a1 = cm.area_per_throughput(3, 48, 16, c)
+    a2 = cm.area_per_throughput(3, 96, 16, c)
+    a3 = cm.area_per_throughput(3, 48, 64, c)
+    assert a2 < a1 and a3 < a1
+
+
+def test_exact_mode_cheaper_than_paper_fit():
+    """The constructive netlist gives ≤ the curve-fit Eq. 5 build adders."""
+    for mu in (2, 3, 4, 5):
+        assert cm.build_cost(mu, 96, mode="exact") <= \
+            cm.build_cost(mu, 96, mode="bound") + 1e-9
+
+
+def test_sota_comparison_tenet_near_optimal():
+    """Table V: TENET's (32,2,32) sits ~1.00× from the model optimum."""
+    rows = {r["work"]: r for r in dse.sota_comparison()}
+    assert rows["tenet"]["model_prediction"] == pytest.approx(1.004, abs=0.05)
+    assert rows["tellme_v2"]["model_prediction"] > 1.1  # off the frontier
+    # published-area comparison: TENET 28nm→16nm vs ours ≈ 7.9×
+    assert rows["tenet"]["area_decrease_vs_published"] == pytest.approx(7.9, rel=0.15)
+
+
+def test_optimal_config_respects_throughput():
+    p = dse.optimal_config_at_throughput(2048, "int8")
+    assert 2048 * 0.98 <= p.throughput <= 2048
+
+
+def test_power_proxy_same_optimum():
+    """Fig. 5b: power tracks area with the same optimal mu."""
+    pw = {mu: cm.power_proxy_breakdown(mu, 32, 32, "fp16")["total"]
+          for mu in (1, 2, 3, 4)}
+    ar = {mu: area(mu, 32, 32, "fp16") for mu in (1, 2, 3, 4)}
+    assert min(pw, key=pw.get) == min(ar, key=ar.get) == 3

@@ -1,0 +1,88 @@
+"""Offline dense encoding (§III-D): roundtrips, widths, density claims."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding as e
+
+MUS = [1, 2, 3, 4, 5, 6]
+
+
+@pytest.mark.parametrize("mu", MUS)
+def test_group_key_roundtrip_exhaustive(mu):
+    """Every ternary combo of size mu encodes/decodes exactly."""
+    if 3**mu > 3**6:
+        pytest.skip("too large")
+    n = 3**mu
+    vals = np.arange(n)
+    trits = np.stack([(vals // 3**i) % 3 - 1 for i in range(mu)], axis=1).astype(np.int8)
+    keys = e.encode_groups(jnp.asarray(trits)[None], mu)
+    dec = e.decode_groups(keys, mu)
+    np.testing.assert_array_equal(np.asarray(dec)[0], trits)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 7), st.integers(1, 9), st.integers(0, 2**31 - 1))
+def test_group_key_roundtrip_random(mu, a, b, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(-1, 2, size=(a, b, mu)).astype(np.int8)
+    k = e.encode_groups(jnp.asarray(w), mu)
+    assert np.asarray(k).dtype == (np.uint8 if e.key_bits(mu) <= 8 else np.uint16)
+    np.testing.assert_array_equal(np.asarray(e.decode_groups(k, mu)), w)
+
+
+def test_key_widths_match_paper():
+    # §III-D: width = ceil(log2((3^mu-1)/2)) + 1; mu=3 → 5 bits, mu=5 → 8 bits
+    assert e.key_bits_paper(3) == 5 and e.key_bits(3) == 5
+    assert e.key_bits_paper(5) == 8 and e.key_bits(5) == 8
+    # our exact width is +1 at mu∈{1,2} (zero-group representability)
+    assert e.key_bits(2) == e.key_bits_paper(2) + 1
+
+
+def test_density_claims():
+    # paper: ≈1.6 bits/weight at mu=5, within 1% of log2(3); 20% below 2-bit
+    bpw = e.bits_per_weight(5)
+    assert bpw == pytest.approx(1.6, abs=1e-9)
+    assert bpw / np.log2(3) < 1.01
+    assert (2.0 - bpw) / 2.0 == pytest.approx(0.20, abs=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 6), st.integers(0, 2**31 - 1))
+def test_base3_pack_roundtrip(n, rows, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(-1, 2, size=(rows, n)).astype(np.int8)
+    p = e.pack_base3(jnp.asarray(w))
+    assert p.shape[-1] == -(-n // 5)
+    np.testing.assert_array_equal(np.asarray(e.unpack_base3(p, n)), w)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 40), st.integers(0, 2**31 - 1))
+def test_2bit_pack_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(-1, 2, size=(3, n)).astype(np.int8)
+    p = e.pack_2bit(jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(e.unpack_2bit(p, n)), w)
+
+
+def test_combo_matrix_symmetry():
+    for mu in (1, 2, 3, 4):
+        C = e.combo_matrix_np(mu)
+        T = e.table_size(mu)
+        assert C.shape == (T + 1, mu)
+        assert (C[T] == 0).all()  # reserved zero row
+        # stored combos are the positive half: most significant non-zero = +1
+        for row in C[:T]:
+            nz = np.nonzero(row)[0]
+            assert len(nz) > 0 and row[nz[-1]] == 1
+
+
+def test_packed_matrix_density():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.integers(-1, 2, size=(64, 100)), jnp.int8)
+    p = e.pack_ternary_matrix(w, jnp.float32(0.5))
+    assert p.bits_per_weight == pytest.approx(1.6, abs=1e-9)
+    np.testing.assert_array_equal(np.asarray(e.unpack_ternary_matrix(p)), np.asarray(w))

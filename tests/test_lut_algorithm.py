@@ -1,0 +1,52 @@
+"""Two-phase LUT algorithm oracle: exact equality with plain matmul."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding, lut_algorithm as la
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 24), st.integers(1, 48),
+       st.integers(0, 2**31 - 1))
+def test_lut_matmul_equals_matmul_int(mu, o, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-9, 9, size=(3, n)), jnp.int32)
+    w = jnp.asarray(rng.integers(-1, 2, size=(o, n)), jnp.int32)
+    y = la.lut_matmul(x, w, mu)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x @ w.T))
+
+
+@pytest.mark.parametrize("mu", [1, 2, 3, 5])
+def test_lut_matmul_float(mu):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 30)), jnp.float32)
+    w = jnp.asarray(rng.integers(-1, 2, size=(11, 30)), jnp.int8)
+    y = la.lut_matmul(x, w.astype(jnp.float32), mu)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w.astype(jnp.float32).T),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("mu", [1, 2, 3])
+def test_onehot_fetch_mode(mu):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 18)), jnp.float32)
+    w = jnp.asarray(rng.integers(-1, 2, size=(7, 18)), jnp.int8)
+    keys = encoding.encode_weight_matrix(w, mu)
+    y = la.lut_matmul_onehot(x, keys, mu)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w.astype(jnp.float32).T),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_build_phase_table_contents():
+    """Table row g must hold every symmetry-reduced partial sum of group g."""
+    mu = 3
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-5, 5, size=(1, 2, mu)), jnp.int32)
+    tables = la.lut_build(x, mu)
+    C = encoding.combo_matrix_np(mu).astype(np.int64)
+    want = np.asarray(x)[0] @ C.T
+    np.testing.assert_array_equal(np.asarray(tables)[0], want)
+    assert (np.asarray(tables)[..., -1] == 0).all()  # hardwired zero entry

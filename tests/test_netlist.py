@@ -1,0 +1,79 @@
+"""Hardware-generator structural tests: Eqs. 2-4, the constructive adder DAG,
+and the generated module hierarchy."""
+
+import numpy as np
+import pytest
+
+from repro.core import netlist as nl
+from repro.core.encoding import combo_matrix_np, table_size
+from repro.core.generator import LUTCoreConfig, generate
+
+
+def test_paper_closed_forms():
+    # Eq. 3 S(mu): S(2)=1, S(3)=4, S(4)=13, S(5)=40
+    assert [nl.S_redundancy(m) for m in (2, 3, 4, 5)] == [1, 4, 13, 40]
+    # Eq. 4 R(mu): R(2)=0, R(3)=4, R(4)=24, R(5)=100
+    assert [nl.R_sparsity(m) for m in (2, 3, 4, 5)] == [0, 4, 24, 100]
+    # Eq. 2 bound: mu=4 → 44 adders
+    assert nl.bound_adders(4) == 44
+
+
+def test_8189_percent_claim():
+    """§III-B: optimizations reduce adders by 'as much as 81.89%' at mu=4."""
+    assert nl.adder_reduction_vs_naive(4) * 100 == pytest.approx(81.89, abs=0.05)
+
+
+@pytest.mark.parametrize("mu", [2, 3, 4, 5, 6])
+def test_constructive_dag_beats_or_meets_bound(mu):
+    prog = nl.build_program(mu)
+    assert prog.n_adders == nl.constructive_adders(mu) == table_size(mu) - mu
+    assert prog.n_adders <= nl.bound_adders(mu)
+
+
+@pytest.mark.parametrize("mu", [1, 2, 3, 4, 5])
+def test_build_program_computes_combo_matrix(mu):
+    """The emitted DAG ('the RTL') must equal its functional spec exactly."""
+    from repro.core.simulator import _run_build_program
+
+    rng = np.random.default_rng(0)
+    prog = nl.build_program(mu) if mu > 1 else nl.build_program(mu)
+    C = combo_matrix_np(mu).astype(np.int64)
+    for _ in range(5):
+        x = rng.integers(-50, 50, size=mu).astype(np.int64)
+        entries = _run_build_program(prog, x)
+        np.testing.assert_array_equal(entries, C @ x)
+
+
+def test_netlist_counts():
+    net = nl.make_netlist(mu=3, L=32, K=32)
+    assert net.n == 96 and net.m == 32 and net.throughput == 96 * 32
+    assert net.acc_adders == 32 * 32          # Eq. 6: L·K
+    assert net.mux2_equiv_paper == 32 * 32 * 13   # Eq. 7: L·K·T
+    assert net.out_regs == 32                 # Eq. 8: K
+    assert net.lut_regs == 13 * 32            # symmetry-reduced storage
+    assert net.build_adders == 10 * 32
+
+
+def test_generator_module_hierarchy():
+    d = generate(LUTCoreConfig(mu=3, L=4, K=2, act_dtype="int8"))
+    text = d.module_hierarchy()
+    assert "LutArray[L=4]" in text and "FacArray[K=2]" in text
+    assert "adders=10" in text
+    assert d.kernel_plan.block_n % 128 == 0
+    r = d.report()
+    assert "TOPS/mm^2" in r
+
+
+def test_generator_validation():
+    with pytest.raises(ValueError):
+        LUTCoreConfig(mu=0, L=1, K=1)
+    with pytest.raises(ValueError):
+        LUTCoreConfig(mu=2, L=0, K=1)
+    with pytest.raises(ValueError):
+        LUTCoreConfig(mu=2, L=1, K=1, act_dtype="fp64")
+
+
+def test_build_depth_is_logarithmic_bound():
+    # our chain construction has depth ≤ mu-1 (one adder per extra trit)
+    for mu in (2, 3, 4, 5):
+        assert nl.build_program(mu).depth <= mu - 1

@@ -1,0 +1,71 @@
+"""BitNet b1.58 quantization invariants (hypothesis property tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as q
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 64), st.integers(2, 64))
+def test_ternarize_invariants(seed, a, b):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(a, b)) * rng.uniform(0.01, 10), jnp.float32)
+    w_t, scale = q.ternarize(w)
+    assert set(np.unique(np.asarray(w_t))) <= {-1, 0, 1}
+    assert float(scale) > 0
+    # absmean reconstruction error bounded by scale/2 + tail clipping
+    err = np.abs(np.asarray(w) - np.asarray(w_t, np.float32) * float(scale))
+    inside = np.abs(np.asarray(w)) <= 1.5 * float(scale)
+    assert (err[inside] <= float(scale) / 2 + 1e-5).all()
+
+
+def test_ternarize_per_channel_axis():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(4, 8, 8)), jnp.float32)
+    w_t, scale = q.ternarize(w, axis=(-2, -1))
+    assert scale.shape == (4, 1, 1)
+    # each slice matches its own per-tensor quantization
+    for i in range(4):
+        wt_i, s_i = q.ternarize(w[i])
+        np.testing.assert_array_equal(np.asarray(w_t[i]), np.asarray(wt_i))
+        assert float(scale[i, 0, 0]) == pytest.approx(float(s_i))
+
+
+def test_ste_gradient_is_identity():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(16, 16)), jnp.float32)
+    g = jax.grad(lambda w: jnp.sum(q.ste_ternarize(w) * 3.0))(w)
+    np.testing.assert_allclose(np.asarray(g), 3.0)
+    g2 = jax.grad(lambda w: jnp.sum(q.fake_quant_ternary(w) * 2.0))(w)
+    np.testing.assert_allclose(np.asarray(g2), 2.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_act_quant_int8(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(3, 32)) * 5, jnp.float32)
+    x_q, scale = q.quantize_activations_int8(x)
+    assert np.asarray(x_q).dtype == np.int8
+    np.testing.assert_allclose(np.asarray(x_q, np.float32) * np.asarray(scale),
+                               np.asarray(x), atol=np.max(np.abs(x)) / 127 + 1e-6)
+
+
+def test_fake_quant_matmul_grads_flow():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    loss = lambda w, x: jnp.sum(q.fake_quant_matmul(x, w) ** 2)
+    gw, gx = jax.grad(loss, argnums=(0, 1))(w, x)
+    assert np.isfinite(np.asarray(gw)).all() and np.abs(np.asarray(gw)).sum() > 0
+    assert np.isfinite(np.asarray(gx)).all()
+
+
+def test_ternary_sparsity_nontrivial():
+    """BitNet absmean quantization must leave a meaningful zero fraction."""
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(256, 256)), jnp.float32)
+    stats = q.ternary_weight_stats(q.ternarize(w)[0])
+    assert 0.15 < float(stats["zero"]) < 0.55

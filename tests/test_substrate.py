@@ -1,0 +1,213 @@
+"""Substrate tests: data pipeline, optimizers, gradient compression,
+checkpointing (atomicity / crc / resume), serving engine."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import checkpointing as ckpt
+from repro.data.pipeline import DataConfig, SyntheticLMStream
+from repro.optim import compression
+from repro.optim.optimizers import (
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+    make_optimizer,
+)
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic():
+    cfg = DataConfig(vocab_size=128, seq_len=32, global_batch=4)
+    a = SyntheticLMStream(cfg).batch(7)
+    b = SyntheticLMStream(cfg).batch(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].shape == (4, 32)
+    assert (a["labels"][:, :-1] == a["tokens"][:, 1:]).all()
+
+
+def test_data_host_sharding_partitions_global_batch():
+    cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=8)
+    whole = SyntheticLMStream(cfg, host_id=0, n_hosts=1).batch(3)
+    parts = [SyntheticLMStream(cfg, host_id=h, n_hosts=4).batch(3)
+             for h in range(4)]
+    np.testing.assert_array_equal(
+        np.concatenate([p["tokens"] for p in parts]), whole["tokens"])
+
+
+def test_data_masks_eod():
+    cfg = DataConfig(vocab_size=64, seq_len=512, global_batch=1, mean_doc_len=32)
+    b = SyntheticLMStream(cfg).batch(0)
+    assert (b["loss_mask"] == (b["labels"] != 0)).all()
+    assert 0 < b["loss_mask"].mean() <= 1
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_decreases_quadratic(name):
+    opt = make_optimizer(name, base_lr=0.1, warmup=1, total=100)
+    params = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(8, 4)),
+                               jnp.float32)}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    l0 = float(loss(params))
+    for step in range(30):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(state, grads, params, jnp.asarray(step))
+    assert float(loss(params)) < 0.5 * l0
+
+
+def test_adafactor_state_is_factored():
+    opt = make_optimizer("adafactor")
+    params = {"m": jnp.zeros((64, 32)), "v": jnp.zeros((7,))}
+    state = opt.init(params)
+    assert state["s"]["m"]["vr"].shape == (64,)
+    assert state["s"]["m"]["vc"].shape == (32,)
+    assert state["s"]["v"]["v"].shape == (7,)
+
+
+def test_state_specs_match_state_structure():
+    from jax.sharding import PartitionSpec as P
+    for name in ("adamw", "adafactor"):
+        opt = make_optimizer(name)
+        params = {"a": jnp.zeros((8, 4)), "b": jnp.zeros((3,))}
+        sds = jax.eval_shape(lambda: params)
+        specs = opt.state_specs({"a": P(None, "model"), "b": P()}, sds)
+        state = jax.eval_shape(opt.init, sds)
+        jax.tree.map(lambda s, x: None, specs, state,
+                     is_leaf=lambda x: isinstance(x, P))  # same treedef
+
+
+def test_clip_by_global_norm():
+    g = {"w": jnp.full((10,), 10.0)}
+    clipped, n = clip_by_global_norm(g, 1.0)
+    assert float(n) == pytest.approx(np.sqrt(1000), rel=1e-5)
+    assert float(jnp.linalg.norm(clipped["w"])) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) < float(lr(jnp.asarray(9)))
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr(jnp.asarray(99))) < 0.01
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_compression_error_feedback_telescopes(seed):
+    """Σ dequantized_k = Σ g_k − err_K: error feedback is unbiased over time."""
+    rng = np.random.default_rng(seed)
+    g_sum = np.zeros((16,), np.float32)
+    d_sum = np.zeros((16,), np.float32)
+    err = {"w": jnp.zeros((16,), jnp.float32)}
+    for _ in range(8):
+        g = rng.normal(size=(16,)).astype(np.float32)
+        deq, err = compression.roundtrip({"w": jnp.asarray(g)}, err)
+        g_sum += g
+        d_sum += np.asarray(deq["w"])
+    resid = np.abs(g_sum - d_sum)
+    # residual is exactly the carried error, bounded by one quantization step
+    np.testing.assert_allclose(resid, np.abs(np.asarray(err["w"])), atol=1e-5)
+
+
+def test_compression_payload_is_int8():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(32,)), jnp.float32)}
+    (q, s), _ = compression.compress_grads(g, compression.init_error_state(g))
+    assert np.asarray(q["w"]).dtype == np.int8
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(8, 8)), jnp.float32),
+            "b": {"c": jnp.asarray(rng.integers(0, 5, size=(3,)), jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 5, t)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    r = ckpt.restore(str(tmp_path), 5, jax.eval_shape(lambda: t))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(np.asarray(a), b), t, r)
+
+
+def test_checkpoint_uncommitted_ignored(tmp_path):
+    t = _tree()
+    d = ckpt.save(str(tmp_path), 3, t)
+    os.remove(os.path.join(d, "_COMMITTED"))
+    assert ckpt.latest_step(str(tmp_path)) is None
+
+
+def test_checkpoint_crc_validation(tmp_path):
+    t = _tree()
+    d = ckpt.save(str(tmp_path), 1, t)
+    # corrupt a shard
+    shard = os.path.join(d, "shard_00000.npz")
+    data = dict(np.load(shard))
+    data["leaf_000000"] = data["leaf_000000"] + 1
+    np.savez(shard, **data)
+    with pytest.raises(IOError):
+        ckpt.restore(str(tmp_path), 1, jax.eval_shape(lambda: t))
+
+
+def test_checkpoint_async_and_latest(tmp_path):
+    for step in (2, 7, 4):
+        ckpt.save_async(str(tmp_path), step, _tree(step))
+    ckpt.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    s, r = ckpt.restore_latest(str(tmp_path), jax.eval_shape(lambda: _tree()))
+    assert s == 7
+    np.testing.assert_array_equal(np.asarray(r["a"]), np.asarray(_tree(7)["a"]))
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+
+def test_decode_engine_generates(key):
+    from repro.configs.registry import get_smoke_config
+    from repro.models.decode import quantize_for_serving
+    from repro.models.model import init_params
+    from repro.serving.engine import DecodeEngine, Request, SamplerConfig
+
+    cfg = get_smoke_config("qwen3-0.6b")
+    sp = quantize_for_serving(init_params(cfg, key), cfg)
+    eng = DecodeEngine(sp, cfg, batch_size=2, max_len=64,
+                       sampler=SamplerConfig(temperature=0.0))
+    reqs = [Request(prompt=[5, 6, 7], max_new_tokens=6),
+            Request(prompt=[9, 2], max_new_tokens=4, stop_token=None)]
+    out = eng.run(reqs)
+    assert len(out[0].out) == 6 and len(out[1].out) == 4
+    assert all(0 <= t < cfg.vocab_size for t in out[0].out)
+
+
+def test_decode_engine_sampling_temperature(key):
+    from repro.serving.engine import SamplerConfig, sample_tokens
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(4, 50)), jnp.float32)
+    greedy = sample_tokens(logits, SamplerConfig(temperature=0.0), key)
+    np.testing.assert_array_equal(np.asarray(greedy),
+                                  np.argmax(np.asarray(logits), -1))
+    hot = sample_tokens(logits, SamplerConfig(temperature=2.0, top_k=5), key)
+    assert hot.shape == (4,)
