@@ -1,70 +1,42 @@
-"""Kernel microbenchmarks: wall time of the three ternary matmul paths.
+"""Kernel microbenchmarks: wall time of every registered ternary matmul path.
 
-CPU interpret-mode numbers are *functional* timings (the TPU target numbers
-come from the roofline analysis); the XLA packed path is the one the serving
-stack actually executes and its timing here is real.
+Kernels are enumerated and executed through the unified dispatch layer
+(``repro.kernels.dispatch``) so this benchmark measures exactly what
+``ternary_matmul(policy="fixed:<name>")`` runs, and the timings are written
+into the autotune cache — running the benchmark *is* autotuning for its
+shape.  CPU interpret-mode numbers for the Pallas kernels are *functional*
+timings (the TPU target numbers come from the roofline analysis); the ``ref``
+XLA path is the one the serving stack executes on CPU and its timing is real.
 """
 
 from __future__ import annotations
 
-import time
-
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import encoding
-from repro.core.quantization import ternarize
-from repro.kernels.dequant_matmul import packed_matmul
-from repro.kernels.lut_matmul import lut_matmul
-from repro.kernels.signflip_matmul import signflip_matmul
-
-
-def _time(fn, *args, reps=3):
-    y = fn(*args)
-    jax.block_until_ready(y)
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        y = fn(*args)
-    jax.block_until_ready(y)
-    return (time.perf_counter() - t0) / reps * 1e6  # us
+from repro.kernels import dispatch
 
 
 def run():
-    rng = np.random.default_rng(0)
     B, O, N = 8, 512, 1024
-    x = jnp.asarray(rng.normal(size=(B, N)), jnp.float32)
-    w = jnp.asarray(rng.normal(size=(O, N)), jnp.float32)
-    w_t, scale = ternarize(w)
-    packed = encoding.pack_base3(w_t)
-    keys = encoding.encode_weight_matrix(w_t, 3)
-    xg = jnp.pad(x, ((0, 0), (0, keys.shape[1] * 3 - N)))
+    backend = jax.default_backend()
 
     rows = []
+    timings = dispatch.autotune(B, N, O, "float32", reps=3,
+                                cache=dispatch.get_autotune_cache())
+    for name, us in sorted(timings.items(), key=lambda kv: kv[1]):
+        spec = dispatch.get_kernel(name)
+        tag = "pallas interpret" if (spec.pallas and backend != "tpu") else "xla"
+        rows.append((f"kernel_{name}", us, f"B{B}xO{O}xN{N} via dispatch ({tag})"))
 
-    def xla_packed(x, p):
-        wt = encoding.unpack_base3(p, N)
-        return x @ wt.astype(x.dtype).T
-
-    rows.append(("kernel_xla_packed_dequant",
-                 _time(jax.jit(xla_packed), x, packed, reps=10),
-                 f"B{B}xO{O}xN{N}, 1.6b/w weight stream (serving path)"))
-    rows.append(("kernel_pallas_signflip_interp",
-                 _time(lambda: signflip_matmul(x, w_t, block_b=8, block_o=128,
-                                               block_n=256)),
-                 "interpret=True functional timing"))
-    rows.append(("kernel_pallas_packed_interp",
-                 _time(lambda: packed_matmul(x, packed, N, block_b=8,
-                                             block_o=128, block_n=320)),
-                 "interpret=True functional timing"))
-    rows.append(("kernel_pallas_lut_mu3_interp",
-                 _time(lambda: lut_matmul(xg, keys, 3, block_b=8, block_o=128,
-                                          block_g=64)),
-                 "interpret=True functional timing"))
+    best = dispatch.get_autotune_cache().best(B, N, O, "float32", backend)
+    auto = dispatch.select_kernel(B, N, O, "float32", policy="auto")
+    rows.append(("dispatch_auto_choice", 0.0,
+                 f"cache best={best}; policy=auto -> {auto.name}"))
 
     # bandwidth story: bytes per weight streamed per matmul
     bf16_bytes = O * N * 2
-    packed_bytes = packed.size
+    packed_bytes = O * -(-N // encoding.TRITS_PER_BYTE)
     rows.append(("weight_bytes_ratio_bf16_over_packed",
                  0.0, f"{bf16_bytes / packed_bytes:.1f}x fewer HBM bytes "
                       f"({packed_bytes} vs {bf16_bytes})"))

@@ -3,8 +3,29 @@
 Each kernel module holds the pl.pallas_call + BlockSpec implementation;
 ``ops.py`` is the jit'd public API and ``ref.py`` the pure-jnp oracles.
 Kernels target TPU and are validated on CPU with interpret=True.
+
+``dispatch.py`` is the unified entry point: a registry of every ternary
+matmul implementation with dtype/shape constraints, a cost-model static
+prior, and a disk-persisted autotune cache.  New call sites should use
+:func:`ternary_matmul` rather than binding to one kernel module.
 """
 
+from repro.kernels.dispatch import (  # noqa: F401
+    REGISTRY,
+    AutotuneCache,
+    KernelSpec,
+    TernaryWeight,
+    autotune,
+    eligible_kernels,
+    get_autotune_cache,
+    get_kernel,
+    kernel_names,
+    register_kernel,
+    reset_autotune_cache,
+    select_kernel,
+    static_prior,
+    ternary_matmul,
+)
 from repro.kernels.ops import (  # noqa: F401
     encode_for_lut,
     encode_packed,

@@ -1,0 +1,654 @@
+"""Unified ternary-matmul dispatch: one entry point, many kernels.
+
+The paper's central finding is that the best ternary-matmul strategy depends
+on activation dtype and operand shape (LUT wins FP16 compute, the benefit is
+minimal at INT8; packed streaming wins when decode is bandwidth-bound).  This
+module makes that trade-off a *runtime* decision instead of a per-callsite
+hard-wiring:
+
+  * a **registry** of every ternary matmul implementation in this package
+    (``ref``, ``lut_onehot``, ``lut_gather``, ``dequant_packed``,
+    ``signflip``, ``w2a8``) with its supported activation dtypes and shape
+    constraints,
+  * a **static prior** derived from the analytical cost model
+    (:mod:`repro.core.cost_model`): per-MAC gate cost of each datapath plus a
+    weight-bytes-streamed term, so small-M (decode) shapes lean to the packed
+    1.6 b/w paths and large-M (prefill) shapes to the cheapest compute,
+  * a **benchmark-driven autotune cache** keyed on
+    ``(M, K, N, activation_dtype, backend)`` and persisted to disk
+    (``REPRO_AUTOTUNE_CACHE``, default ``~/.cache/repro/autotune.json``),
+    populated by :func:`autotune` / ``benchmarks/autotune_sweep.py``,
+  * a single public entry point::
+
+        y = ternary_matmul(x, w, policy="auto")          # cache → prior
+        y = ternary_matmul(x, w, policy="fixed:signflip")  # reproducible pin
+
+Shape convention: ``x [..., K]`` activations, weights ``[N, K]`` (out-major,
+as everywhere in this repo), result ``[..., N]``.  All kernels consume
+*unscaled* trits; the BitNet absmean scale is applied once on the way out.
+
+On CPU the Pallas kernels run in interpret mode, which is functionally exact
+but orders of magnitude slower than XLA — the prior carries a backend-aware
+penalty so ``auto`` never routes a CPU serving path through an interpreted
+kernel unless the autotune cache has measured otherwise.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+import warnings
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encoding
+from repro.core import cost_model as cm
+from repro.kernels.dequant_matmul import packed_matmul
+from repro.kernels.lut_matmul import lut_matmul
+from repro.kernels.signflip_matmul import signflip_matmul
+from repro.kernels.w2a8_matmul import w2a8_matmul
+
+__all__ = [
+    "TernaryWeight", "KernelSpec", "REGISTRY", "register_kernel",
+    "kernel_names", "get_kernel", "eligible_kernels", "select_kernel",
+    "static_prior", "ternary_matmul", "autotune",
+    "AutotuneCache", "get_autotune_cache", "reset_autotune_cache",
+    "DEFAULT_POLICY_ENV",
+]
+
+DEFAULT_POLICY_ENV = "REPRO_TERNARY_POLICY"
+CACHE_PATH_ENV = "REPRO_AUTOTUNE_CACHE"
+
+#: roofline-ish exchange rate between the two prior terms: how many
+#: gate-cycles of compute one byte of HBM weight traffic is "worth".
+GATES_PER_BYTE = 2048.0
+
+#: multiplier applied to Pallas kernels when the backend executes them in
+#: interpret mode (CPU) — functional, but never competitive.
+INTERPRET_PENALTY = 1e4
+
+
+# ---------------------------------------------------------------------------
+# Unified weight container
+# ---------------------------------------------------------------------------
+
+
+class TernaryWeight:
+    """A ternary weight matrix with lazily derived per-kernel encodings.
+
+    Holds the logical ``[N, K]`` trit matrix (out-major) and its BitNet
+    absmean ``scale``; the base-3 packed bytes (dequant/w2a8 paths) and the
+    mu-group LUT keys are derived on first use and cached, so a weight
+    prepared once can be routed through any registered kernel.
+    """
+
+    def __init__(self, w_t: jax.Array | None = None, scale=1.0, *,
+                 packed: jax.Array | None = None, k: int | None = None,
+                 mu: int = 3):
+        if w_t is None and packed is None:
+            raise ValueError("need trits or packed bytes")
+        if w_t is not None and w_t.dtype != jnp.int8:
+            w_t = w_t.astype(jnp.int8)
+        self._w_t = w_t
+        self._packed = packed
+        self._k = int(w_t.shape[-1]) if w_t is not None else int(k)
+        self.scale = scale
+        self.mu = mu
+        self._keys: dict[int, jax.Array] = {}
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def from_dense(cls, w: jax.Array, *, mu: int = 3) -> "TernaryWeight":
+        """Master fp weights ``[N, K]`` → ternarized container."""
+        from repro.core.quantization import ternarize
+
+        w_t, scale = ternarize(w)
+        return cls(w_t, scale, mu=mu)
+
+    @classmethod
+    def from_ternary(cls, w_t: jax.Array, scale=1.0, *, mu: int = 3) -> "TernaryWeight":
+        return cls(w_t, scale, mu=mu)
+
+    @classmethod
+    def from_packed(cls, packed: jax.Array, scale, k: int, *,
+                    mu: int = 3) -> "TernaryWeight":
+        """Deployment artifact ``{"packed" [N, ceil(K/5)], "scale"}`` → container."""
+        return cls(None, scale, packed=packed, k=k, mu=mu)
+
+    # -- shapes -------------------------------------------------------------
+
+    @property
+    def out_features(self) -> int:
+        src = self._w_t if self._w_t is not None else self._packed
+        return int(src.shape[0])
+
+    @property
+    def in_features(self) -> int:
+        return self._k
+
+    # -- encodings ----------------------------------------------------------
+    # Derived encodings are cached only when concrete: a value computed while
+    # tracing (e.g. the weight arrived as a jit argument) is a Tracer and
+    # caching it would leak it into later traces (UnexpectedTracerError).
+
+    @staticmethod
+    def _concrete(v: jax.Array) -> bool:
+        return not isinstance(v, jax.core.Tracer)
+
+    def trits(self) -> jax.Array:
+        """Dense ``[N, K]`` int8 trits (ref/signflip paths)."""
+        if self._w_t is not None:
+            return self._w_t
+        w_t = encoding.unpack_base3(self._packed, self._k)
+        if self._concrete(w_t):
+            self._w_t = w_t
+        return w_t
+
+    def packed(self) -> jax.Array:
+        """Base-3 packed bytes ``[N, ceil(K/5)]`` (dequant/w2a8 paths)."""
+        if self._packed is not None:
+            return self._packed
+        packed = encoding.pack_base3(self._w_t)
+        if self._concrete(packed):
+            self._packed = packed
+        return packed
+
+    def keys(self, mu: int | None = None) -> jax.Array:
+        """Group keys ``[N, ceil(K/mu)]`` (LUT paths)."""
+        mu = mu or self.mu
+        if mu in self._keys:
+            return self._keys[mu]
+        keys = encoding.encode_weight_matrix(self.trits(), mu)
+        if self._concrete(keys):
+            self._keys[mu] = keys
+        return keys
+
+
+def _as_weight(w, scale, mu) -> TernaryWeight:
+    if isinstance(w, TernaryWeight):
+        return w
+    if isinstance(w, encoding.PackedTernary):
+        return TernaryWeight.from_packed(w.data, w.scale, w.shape[1],
+                                         mu=mu or 3)
+    w = jnp.asarray(w)
+    if w.dtype != jnp.int8:
+        raise TypeError(
+            "ternary_matmul weights must be a TernaryWeight, PackedTernary, "
+            f"or int8 trit matrix; got dtype {w.dtype}. Use "
+            "TernaryWeight.from_dense(w) to ternarize master weights.")
+    return TernaryWeight.from_ternary(w, 1.0 if scale is None else scale,
+                                      mu=mu or 3)
+
+
+# ---------------------------------------------------------------------------
+# Kernel registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class KernelSpec:
+    """One registered ternary-matmul implementation.
+
+    ``run(x2, w, mu, interpret)`` consumes ``x2 [M, K]`` and returns the
+    *unscaled* ``[M, N] float32`` product against ``w.trits()``.
+    """
+
+    name: str
+    run: Callable
+    act_dtypes: frozenset
+    pallas: bool                      # interpret-mode on CPU → prior penalty
+    prior_per_mac: Callable           # (K, N, coeffs, mu) -> gates per MAC
+    weight_bytes: Callable            # (K, N, mu) -> HBM bytes streamed
+    describe: str = ""
+    constraint: Callable | None = None  # (M, K, N, act_dtype) -> bool
+
+    def supports(self, m: int, k: int, n: int, act_dtype: str) -> bool:
+        if act_dtype not in self.act_dtypes:
+            return False
+        if self.constraint is not None and not self.constraint(m, k, n, act_dtype):
+            return False
+        return True
+
+
+REGISTRY: dict[str, KernelSpec] = {}
+
+_FLOAT_DTYPES = frozenset({"float32", "bfloat16", "float16"})
+_ALL_DTYPES = _FLOAT_DTYPES | {"int8"}
+
+
+def register_kernel(spec: KernelSpec) -> KernelSpec:
+    if spec.name in REGISTRY:
+        raise ValueError(f"kernel {spec.name!r} already registered")
+    REGISTRY[spec.name] = spec
+    return spec
+
+
+def kernel_names() -> list[str]:
+    return list(REGISTRY)
+
+
+def get_kernel(name: str) -> KernelSpec:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown kernel {name!r}; registered: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def eligible_kernels(m: int, k: int, n: int, act_dtype: str) -> list[KernelSpec]:
+    return [s for s in REGISTRY.values() if s.supports(m, k, n, act_dtype)]
+
+
+# -- kernel adapters --------------------------------------------------------
+
+
+def _to_f32(x2: jax.Array) -> jax.Array:
+    return x2.astype(jnp.float32)
+
+
+def _run_ref(x2, w, mu, interpret):
+    # Pure-XLA oracle/deployment path: unpack (if packed) + dense f32 matmul.
+    # This is both the correctness reference for every other kernel and the
+    # fastest CPU execution of the packed serving artifact.
+    wt = w.trits().astype(jnp.float32)
+    return _to_f32(x2) @ wt.T
+
+
+def _run_lut(fetch):
+    def run(x2, w, mu, interpret):
+        keys = w.keys(mu)
+        G = keys.shape[-1]
+        pad = G * mu - x2.shape[-1]
+        if pad:
+            x2 = jnp.pad(x2, ((0, 0), (0, pad)))
+        return lut_matmul(_to_f32(x2), keys, mu, fetch=fetch, interpret=interpret)
+
+    return run
+
+
+def _run_dequant(x2, w, mu, interpret):
+    return packed_matmul(_to_f32(x2), w.packed(), w.in_features,
+                         interpret=interpret)
+
+
+def _run_signflip(x2, w, mu, interpret):
+    return signflip_matmul(_to_f32(x2), w.trits(), interpret=interpret)
+
+
+def _run_w2a8(x2, w, mu, interpret):
+    y = w2a8_matmul(x2, w.packed(), w.in_features, interpret=interpret)
+    return y.astype(jnp.float32)
+
+
+# -- cost-model hooks (static prior) ----------------------------------------
+
+
+def _per_mac_lut(k, n, c, mu):
+    return cm.area_per_throughput(mu, max(k, mu), max(n, 1), c)
+
+
+def _per_mac_dequant(k, n, c, mu):
+    return cm.area_gates_dequant_baseline(k, n, c) / max(k * n, 1)
+
+
+def _per_mac_signflip(k, n, c, mu):
+    return cm.area_gates_signflip_baseline(k, n, c) / max(k * n, 1)
+
+
+def _per_mac_dense(k, n, c, mu):
+    # full-width multiplier + accumulator per MAC, no dequant cell
+    return c.a_mul + c.a_add
+
+
+def _bytes_dense(k, n, mu):
+    return 2.0 * k * n          # bf16 dense weights
+
+
+def _bytes_trits(k, n, mu):
+    return float(k * n)         # int8 trit stream (signflip)
+
+
+def _bytes_packed(k, n, mu):
+    return n * math.ceil(k / encoding.TRITS_PER_BYTE)   # 1.6 b/w base-3
+
+
+def _bytes_keys(k, n, mu):
+    nbytes = 1 if encoding.key_bits(mu) <= 8 else 2
+    return n * math.ceil(k / mu) * nbytes
+
+
+register_kernel(KernelSpec(
+    name="ref", run=_run_ref, act_dtypes=_ALL_DTYPES, pallas=False,
+    prior_per_mac=_per_mac_dense, weight_bytes=_bytes_dense,
+    describe="pure-XLA dense f32 matmul over decoded trits (oracle + CPU "
+             "serving path)"))
+
+register_kernel(KernelSpec(
+    name="lut_onehot", run=_run_lut("onehot"), act_dtypes=_ALL_DTYPES,
+    pallas=True, prior_per_mac=_per_mac_lut, weight_bytes=_bytes_keys,
+    describe="two-phase LUT Pallas kernel, MXU-resident signed one-hot fetch",
+    constraint=lambda m, k, n, d: True))
+
+register_kernel(KernelSpec(
+    name="lut_gather", run=_run_lut("gather"), act_dtypes=_ALL_DTYPES,
+    pallas=True, prior_per_mac=_per_mac_lut, weight_bytes=_bytes_keys,
+    describe="two-phase LUT Pallas kernel, VPU dynamic-gather fetch "
+             "(literal read-out MUX)",
+    constraint=lambda m, k, n, d: True))
+
+register_kernel(KernelSpec(
+    name="dequant_packed", run=_run_dequant, act_dtypes=_ALL_DTYPES,
+    pallas=True, prior_per_mac=_per_mac_dequant, weight_bytes=_bytes_packed,
+    describe="base-3 packed streaming dequant Pallas kernel (1.6 b/w)"))
+
+register_kernel(KernelSpec(
+    name="signflip", run=_run_signflip, act_dtypes=_ALL_DTYPES,
+    pallas=True, prior_per_mac=_per_mac_signflip, weight_bytes=_bytes_trits,
+    describe="binary-plane MXU sign-flip baseline (Fig. 1 middle)"))
+
+register_kernel(KernelSpec(
+    name="w2a8", run=_run_w2a8, act_dtypes=frozenset({"int8"}),
+    pallas=True, prior_per_mac=_per_mac_dequant, weight_bytes=_bytes_packed,
+    describe="W1.58A8 exact int8×trit→int32 kernel (paper Table I operating "
+             "point); requires pre-quantized int8 activations"))
+
+
+# ---------------------------------------------------------------------------
+# Static prior (analytical cost model)
+# ---------------------------------------------------------------------------
+
+
+def static_prior(spec: KernelSpec, m: int, k: int, n: int, act_dtype: str,
+                 backend: str | None = None, mu: int = 3) -> float:
+    """Analytical cost score for running ``spec`` on an ``[m,k]×[n,k]``
+    matmul: per-MAC gate cost from the paper's area model (Eqs. 5-10 /
+    Fig. 1 baselines) × MAC count, plus the weight bytes streamed from HBM
+    weighted at :data:`GATES_PER_BYTE`.  Lower is better.  On backends that
+    interpret Pallas (CPU) the Pallas kernels carry
+    :data:`INTERPRET_PENALTY` so the prior reflects wall-clock reality
+    there; the autotune cache overrides the prior either way.
+    """
+    backend = backend or jax.default_backend()
+    coeffs = cm.get_coeffs("int8" if act_dtype == "int8" else "fp16")
+    compute = float(m) * k * n * spec.prior_per_mac(k, n, coeffs, mu)
+    traffic = GATES_PER_BYTE * spec.weight_bytes(k, n, mu)
+    cost = compute + traffic
+    if spec.pallas and backend != "tpu":
+        cost *= INTERPRET_PENALTY
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# Autotune cache
+# ---------------------------------------------------------------------------
+
+
+def _default_cache_path() -> str:
+    return os.environ.get(
+        CACHE_PATH_ENV,
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "autotune.json"))
+
+
+@dataclass
+class AutotuneCache:
+    """Disk-persisted measurements: ``(M,K,N,dtype,backend) → {kernel: µs}``.
+
+    JSON format (schema_version 1)::
+
+        {"schema_version": 1,
+         "entries": {"M8:K1024:N512:mu3:float32:cpu": {"ref": 410.2, ...}}}
+
+    ``mu`` is part of the key: LUT key-decode cost and bytes streamed scale
+    with the group size, so timings at one mu must not steer another.
+    """
+
+    path: str = field(default_factory=_default_cache_path)
+    entries: dict = field(default_factory=dict)
+
+    @staticmethod
+    def key(m: int, k: int, n: int, act_dtype: str, backend: str, *,
+            mu: int = 3) -> str:
+        return f"M{m}:K{k}:N{n}:mu{mu}:{act_dtype}:{backend}"
+
+    @classmethod
+    def load(cls, path: str | None = None) -> "AutotuneCache":
+        path = path or _default_cache_path()
+        entries = {}
+        try:
+            with open(path) as fh:
+                doc = json.load(fh)
+            if isinstance(doc, dict) and doc.get("schema_version") == 1:
+                entries = doc.get("entries", {})
+        except (OSError, ValueError):
+            pass
+        return cls(path=path, entries=entries)
+
+    def save(self) -> None:
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump({"schema_version": 1, "entries": self.entries}, fh,
+                      indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    def record(self, m: int, k: int, n: int, act_dtype: str, backend: str,
+               kernel: str, us: float, *, mu: int = 3) -> None:
+        key = self.key(m, k, n, act_dtype, backend, mu=mu)
+        self.entries.setdefault(key, {})[kernel] = us
+
+    def timings(self, m, k, n, act_dtype, backend, *, mu: int = 3) -> dict[str, float]:
+        return dict(self.entries.get(
+            self.key(m, k, n, act_dtype, backend, mu=mu), {}))
+
+    def best(self, m: int, k: int, n: int, act_dtype: str,
+             backend: str, *, mu: int = 3) -> str | None:
+        t = self.timings(m, k, n, act_dtype, backend, mu=mu)
+        t = {name: us for name, us in t.items() if name in REGISTRY}
+        return min(t, key=t.get) if t else None
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+
+_CACHE: AutotuneCache | None = None
+
+
+def get_autotune_cache() -> AutotuneCache:
+    global _CACHE
+    if _CACHE is None:
+        _CACHE = AutotuneCache.load()
+    return _CACHE
+
+
+def reset_autotune_cache() -> None:
+    """Drop the in-process cache (re-reads REPRO_AUTOTUNE_CACHE on next use)."""
+    global _CACHE
+    _CACHE = None
+
+
+# ---------------------------------------------------------------------------
+# Selection + public entry point
+# ---------------------------------------------------------------------------
+
+
+def _act_dtype_name(x: jax.Array) -> str:
+    return jnp.dtype(x.dtype).name
+
+
+def select_kernel(m: int, k: int, n: int, act_dtype: str, *,
+                  policy: str | None = None, backend: str | None = None,
+                  cache: AutotuneCache | None = None,
+                  mu: int = 3) -> KernelSpec:
+    """Resolve a policy to a registered kernel for the given problem.
+
+    Policies:
+      * ``"fixed:<name>"`` — always use ``<name>`` (reproducibility pin);
+        raises if the kernel does not support the dtype/shape.
+      * ``"auto"`` — autotune-cache best if measured, else analytical prior.
+      * ``"prior"`` — analytical prior only (ignore the cache).
+
+    ``policy=None`` reads ``$REPRO_TERNARY_POLICY``, defaulting to ``auto``.
+    """
+    policy = policy or os.environ.get(DEFAULT_POLICY_ENV, "auto")
+    backend = backend or jax.default_backend()
+
+    if policy.startswith("fixed:"):
+        spec = get_kernel(policy[len("fixed:"):])
+        if not spec.supports(m, k, n, act_dtype):
+            raise ValueError(
+                f"kernel {spec.name!r} does not support M={m} K={k} N={n} "
+                f"act_dtype={act_dtype} (supported dtypes: "
+                f"{sorted(spec.act_dtypes)})")
+        return spec
+
+    if policy not in ("auto", "prior"):
+        raise ValueError(
+            f"unknown policy {policy!r}; expected 'auto', 'prior', or "
+            f"'fixed:<name>' with name in {sorted(REGISTRY)}")
+
+    candidates = eligible_kernels(m, k, n, act_dtype)
+    if not candidates:
+        raise ValueError(f"no registered kernel supports M={m} K={k} N={n} "
+                         f"act_dtype={act_dtype}")
+
+    if policy == "auto":
+        cache = cache or get_autotune_cache()
+        best = cache.best(m, k, n, act_dtype, backend, mu=mu)
+        if best is not None and get_kernel(best).supports(m, k, n, act_dtype):
+            return get_kernel(best)
+
+    # name tiebreak keeps selection deterministic across dict orderings
+    return min(candidates,
+               key=lambda s: (static_prior(s, m, k, n, act_dtype, backend, mu),
+                              s.name))
+
+
+def _default_interpret() -> bool:
+    """Pallas interpret mode everywhere except real TPU hardware."""
+    return jax.default_backend() != "tpu"
+
+
+def ternary_matmul(x: jax.Array, w, *, scale=None, policy: str | None = None,
+                   mu: int | None = None, interpret: bool | None = None,
+                   backend: str | None = None,
+                   cache: AutotuneCache | None = None) -> jax.Array:
+    """``y[..., n] = Σ_k x[..., k] · trits(w)[n, k] · scale`` via the best
+    registered kernel for this (shape, dtype, backend).
+
+    Args:
+      x: ``[..., K]`` activations — float (fp32/bf16/fp16) or pre-quantized
+        int8 (routes the W1.58A8 paths; caller applies the activation scale).
+      w: :class:`TernaryWeight`, :class:`repro.core.encoding.PackedTernary`,
+        or an int8 trit matrix ``[N, K]``.
+      scale: overrides ``w``'s weight scale (rank-1 correction, applied once).
+      policy: ``"auto"`` | ``"prior"`` | ``"fixed:<name>"``; ``None`` reads
+        ``$REPRO_TERNARY_POLICY`` (default ``auto``).
+      mu: LUT group size override (default: the weight's, typically 3).
+      interpret: run Pallas kernels in interpret mode; ``None`` (default)
+        resolves from the executing backend — compiled on real TPU,
+        interpret everywhere else.
+
+    Returns ``[..., N]`` in ``x``'s dtype (float inputs) or float32 (int8
+    inputs).  Selection happens at Python/trace time from *static* shapes, so
+    the call is jit-compatible; under jit the choice is frozen into the
+    compiled executable.
+    """
+    tw = _as_weight(w, scale, mu)
+    mu = mu or tw.mu
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m, k = int(np.prod(lead)) if lead else 1, x.shape[-1]
+    if k != tw.in_features:
+        raise ValueError(f"x K={k} != weight K={tw.in_features}")
+    n = tw.out_features
+    act = _act_dtype_name(x)
+
+    spec = select_kernel(m, k, n, act, policy=policy, backend=backend,
+                         cache=cache, mu=mu)
+    if interpret is None:
+        interpret = _default_interpret()
+    y = spec.run(x2, tw, mu, interpret)
+    s = tw.scale if scale is None else scale
+    if s is not None:
+        y = y * jnp.asarray(s, jnp.float32)
+    out_dtype = jnp.float32 if act == "int8" else x.dtype
+    return y.reshape(*lead, n).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Autotuning
+# ---------------------------------------------------------------------------
+
+
+def autotune(m: int, k: int, n: int, act_dtype: str = "float32", *,
+             kernels: list[str] | None = None, reps: int = 3, seed: int = 0,
+             interpret: bool | None = None, backend: str | None = None,
+             cache: AutotuneCache | None = None, save: bool = True,
+             mu: int = 3) -> dict[str, float]:
+    """Benchmark every eligible kernel on an ``[m,k]×[n,k]`` problem and
+    record the wall-times (µs) in the autotune cache.
+
+    Timing reproduces the serving data path: the 1.6 b/w packed artifact
+    enters the jitted function as an *argument*, so kernels that derive
+    trits/keys (ref, signflip, lut_*) pay that per-step decode inside the
+    measurement, exactly as ``layers.linear`` does — not from baked-in
+    constants, which would bias selection against the in-kernel-decode paths.
+
+    Returns ``{kernel_name: µs}``.  Subsequent ``policy="auto"`` dispatches
+    for the same ``(M, K, N, dtype, backend)`` use the measured best.
+    """
+    if reps < 1:
+        raise ValueError(f"reps must be >= 1, got {reps}")
+    local = jax.default_backend()
+    backend = backend or local
+    if backend != local:
+        # timings are taken on the local device; recording them under another
+        # backend's cache key would poison that backend's auto dispatch
+        raise ValueError(f"autotune measures on the local backend {local!r}; "
+                         f"cannot record for backend={backend!r}")
+    if interpret is None:
+        interpret = _default_interpret()
+    cache = cache or get_autotune_cache()
+    rng = np.random.default_rng(seed)
+    if act_dtype == "int8":
+        x = jnp.asarray(rng.integers(-127, 128, size=(m, k)), jnp.int8)
+    else:
+        x = jnp.asarray(rng.normal(size=(m, k)), act_dtype)
+    packed = encoding.pack_base3(
+        jnp.asarray(rng.integers(-1, 2, size=(n, k)), jnp.int8))
+
+    names = kernels or [s.name for s in eligible_kernels(m, k, n, act_dtype)]
+    results: dict[str, float] = {}
+    for name in names:
+        spec = get_kernel(name)
+        if not spec.supports(m, k, n, act_dtype):
+            continue
+
+        def call(xx, pk, run=spec.run):
+            return run(xx, TernaryWeight.from_packed(pk, 1.0, k, mu=mu),
+                       mu, interpret)
+
+        fn = jax.jit(call)
+        try:
+            jax.block_until_ready(fn(x, packed))  # compile + warm
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                y = fn(x, packed)
+            jax.block_until_ready(y)
+            us = (time.perf_counter() - t0) / reps * 1e6
+        except Exception as e:  # pragma: no cover - kernel unavailable on backend
+            warnings.warn(f"autotune: kernel {name!r} failed on "
+                          f"M{m} K{k} N{n} {act_dtype}/{backend}: {e}")
+            continue
+        results[name] = us
+        cache.record(m, k, n, act_dtype, backend, name, us, mu=mu)
+    if save and results:
+        cache.save()
+    return results

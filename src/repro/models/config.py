@@ -59,6 +59,10 @@ class ModelConfig:
     quant: str = "qat"             # "fp" | "qat" (training); serving packs ternary
     quantize_acts: bool = False    # optional INT8 activation fake-quant in QAT
     mu: int = 3                    # LUT group size for the lut serving path
+    matmul_policy: str | None = None   # ternary-matmul dispatch: "auto" |
+                                       # "prior" | "fixed:<kernel>"; None
+                                       # defers to $REPRO_TERNARY_POLICY,
+                                       # then "auto" (repro.kernels.dispatch)
 
     # numerics / training
     dtype: str = "bfloat16"

@@ -89,6 +89,51 @@ def quantize_for_serving(p: Params, cfg: ModelConfig) -> Params:
     return walk(p, ())
 
 
+def layer_matmul_shapes(cfg: ModelConfig, batch_size: int,
+                        seq_len: int = 1) -> list[tuple[int, int, int]]:
+    """The distinct ternary-matmul problems ``(M, K, N)`` one forward step
+    issues through :func:`repro.kernels.dispatch.ternary_matmul`.
+
+    ``M = batch_size · seq_len`` (decode: ``seq_len=1``); ``K``/``N`` are the
+    in/out features of every ternary-eligible dense projection of the
+    architecture.  This is the shape universe the autotune sweep
+    (``benchmarks/autotune_sweep.py``) populates the dispatch cache with, so
+    serving dispatch hits measured entries instead of the analytical prior.
+    """
+    M = batch_size * seq_len
+    d = cfg.d_model
+    shapes: set[tuple[int, int, int]] = set()
+
+    def proj(k, n):
+        if k and n:
+            shapes.add((M, int(k), int(n)))
+
+    has_attn = cfg.block_pattern in ("attn", "zamba2") or cfg.is_encdec
+    if has_attn:
+        proj(d, cfg.q_dim)
+        proj(d, cfg.kv_dim)
+        proj(cfg.q_dim, d)
+    if cfg.d_ff:
+        proj(d, cfg.d_ff)          # wi / wg
+        proj(cfg.d_ff, d)          # wo
+    if cfg.dense_ff:
+        proj(d, cfg.dense_ff)
+        proj(cfg.dense_ff, d)
+    if cfg.block_pattern in ("zamba2", "mamba2"):
+        d_in, _, _ = ssm.ssm_dims(cfg)
+        proj(d, d_in)              # wz / wx
+        proj(d_in, d)              # wo
+    if cfg.block_pattern == "xlstm":
+        d_in, _, _ = xlstm.mlstm_dims(cfg)
+        proj(d, 2 * d_in)          # mLSTM up
+        proj(d_in, d_in)           # mLSTM wq/wk/wv
+        proj(d_in, d)              # mLSTM down
+        up = int(d * 4 / 3)
+        proj(d, 2 * up)            # sLSTM ffn_up
+        proj(up, d)                # sLSTM ffn_down
+    return sorted(shapes)
+
+
 def packed_bits_per_weight(p: Params) -> float:
     """Measured storage density of the serving artifact (paper: ≈1.6 b/w)."""
     packed_bits = ternary_weights = 0

@@ -63,10 +63,20 @@ def rms_norm(p: Params, x: jax.Array, *, offset: bool = False, eps: float = 1e-6
 def linear(p: Params, x: jax.Array, cfg: ModelConfig, *, ternary: bool = True):
     """Apply a (possibly ternary) linear layer.  See module docstring."""
     if "packed" in p:
-        n = x.shape[-1]
-        w_t = encoding.unpack_base3(p["packed"], n)  # [out, in]
-        y = jnp.einsum("...d,od->...o", x, w_t.astype(x.dtype))
-        y = y * p["scale"].astype(y.dtype)
+        k = x.shape[-1]
+        if p["packed"].ndim != 2:
+            # stacked serving params are sliced per layer by lax.scan before
+            # they reach linear(); per-expert stacks go via _expert_matmul
+            raise NotImplementedError(
+                f"linear() needs a per-layer [out, in/5] packed matrix, got "
+                f"shape {p['packed'].shape}; slice the stacked dim first")
+        # unified dispatch: the serving policy (cfg.matmul_policy, or
+        # $REPRO_TERNARY_POLICY) picks the kernel per (shape, dtype,
+        # backend) — autotune-cache best, cost-model prior, or a pin.
+        from repro.kernels.dispatch import TernaryWeight, ternary_matmul
+
+        tw = TernaryWeight.from_packed(p["packed"], p["scale"], k, mu=cfg.mu)
+        y = ternary_matmul(x, tw, policy=cfg.matmul_policy)
     else:
         w = p["w"]
         if ternary and cfg.quant == "qat":

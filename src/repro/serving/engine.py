@@ -53,7 +53,14 @@ class Request:
 
 class DecodeEngine:
     def __init__(self, params, cfg: ModelConfig, *, batch_size: int,
-                 max_len: int, sampler: SamplerConfig | None = None):
+                 max_len: int, sampler: SamplerConfig | None = None,
+                 matmul_policy: str | None = None):
+        """``matmul_policy`` overrides ``cfg.matmul_policy`` for every ternary
+        projection this engine executes ("auto" | "prior" | "fixed:<kernel>",
+        see :mod:`repro.kernels.dispatch`).  Kernel selection happens once,
+        at trace time of the jitted prefill/decode step."""
+        if matmul_policy is not None:
+            cfg = cfg.with_(matmul_policy=matmul_policy)
         self.params = params
         self.cfg = cfg
         self.B = batch_size
@@ -62,6 +69,23 @@ class DecodeEngine:
         self._step = jax.jit(
             lambda p, c, t, i: decode_step(p, cfg, c, t, i))
         self._key = jax.random.PRNGKey(self.sampler.seed)
+
+    def autotune_shapes(self, **autotune_kw) -> dict:
+        """Populate the dispatch autotune cache for this engine's per-step
+        matmul shapes (see :func:`repro.models.decode.layer_matmul_shapes`);
+        call before the first `run` so ``policy="auto"`` dispatches on
+        measurements instead of the analytical prior."""
+        from repro.kernels.dispatch import autotune, get_autotune_cache
+        from repro.models.decode import layer_matmul_shapes
+
+        cache = get_autotune_cache()
+        results = {}
+        for (m, k, n) in layer_matmul_shapes(self.cfg, self.B):
+            results[(m, k, n)] = autotune(m, k, n, self.cfg.dtype,
+                                          mu=self.cfg.mu, cache=cache,
+                                          save=False, **autotune_kw)
+        cache.save()  # one write for the whole shape set
+        return results
 
     def run(self, requests: list[Request]) -> list[Request]:
         """Run a batch of requests to completion (simple generational

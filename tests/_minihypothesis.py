@@ -1,0 +1,149 @@
+"""Deterministic fallback for the subset of `hypothesis` this suite uses.
+
+The real `hypothesis` is a dev dependency (see requirements-dev.txt) and is
+what CI runs.  In environments where it is not installed, ``conftest.py``
+registers this module as ``sys.modules["hypothesis"]`` so the suite still
+*collects and runs*: ``@given`` replays a fixed number of deterministic
+pseudo-random examples (seeded per test name) instead of hard-erroring at
+import time.  Strategies outside the supported subset degrade to a
+skip-with-reason rather than a collection error.
+
+Supported: ``given``, ``settings(max_examples=, deadline=)``, ``assume``,
+``strategies.integers(min, max)``, ``strategies.sampled_from(seq)``,
+``strategies.booleans()``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    """A draw rule: ``draw(rng)`` returns one example."""
+
+    def __init__(self, draw, label):
+        self._draw = draw
+        self.label = label
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"_Strategy({self.label})"
+
+
+class _UnsupportedStrategy(_Strategy):
+    def __init__(self, label):
+        super().__init__(lambda rng: None, label)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        elems = list(seq)
+        return _Strategy(lambda rng: rng.choice(elems), f"sampled_from({elems!r})")
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)), "booleans()")
+
+    def __getattr__(self, name):  # unknown strategy → skip, not crash
+        return lambda *a, **kw: _UnsupportedStrategy(f"{name}(...)")
+
+
+strategies = _Strategies()
+
+
+class _Rejected(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Rejected
+    return True
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+    @classmethod
+    def all(cls):
+        return []
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._mini_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats, **kw_strats):
+    unsupported = [s.label for s in (*strats, *kw_strats.values())
+                   if isinstance(s, _UnsupportedStrategy)]
+
+    def deco(fn):
+        if unsupported:
+            @functools.wraps(fn)
+            def skipper(*a, **kw):
+                import pytest
+
+                pytest.skip("hypothesis not installed; minihypothesis does not "
+                            f"support strategies: {', '.join(unsupported)}")
+
+            return skipper
+
+        # As in real hypothesis: positional strategies fill the *rightmost*
+        # parameters; anything left of them (fixtures) stays in the wrapper's
+        # signature so pytest injects it.
+        params = [p for p in inspect.signature(fn).parameters.values()
+                  if p.name not in kw_strats]
+        strat_names = [p.name for p in params[len(params) - len(strats):]]
+        fixture_params = params[:len(params) - len(strats)]
+
+        @functools.wraps(fn)
+        def runner(**fixture_kwargs):
+            n = getattr(runner, "_mini_max_examples",
+                        getattr(fn, "_mini_max_examples", DEFAULT_MAX_EXAMPLES))
+            # Stable per-test seed (hash() is randomized per process; crc32 not).
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            ran = 0
+            for _ in range(n * 10):  # headroom for assume() rejections
+                if ran >= n:
+                    break
+                call = dict(fixture_kwargs)
+                call.update(zip(strat_names, (s.draw(rng) for s in strats)))
+                call.update({k: s.draw(rng) for k, s in kw_strats.items()})
+                try:
+                    fn(**call)
+                except _Rejected:
+                    continue
+                ran += 1
+            if ran == 0:  # mirror hypothesis' Unsatisfied: never pass vacuously
+                raise AssertionError(
+                    f"minihypothesis: no example satisfied assume() for "
+                    f"{fn.__qualname__} after {n * 10} attempts")
+
+        runner.__signature__ = inspect.Signature(fixture_params)
+
+        # Mimic real hypothesis' marker: plugins (e.g. anyio) reach for
+        # ``fn.hypothesis.inner_test``.
+        runner.hypothesis = type("_Meta", (), {"inner_test": staticmethod(fn)})()
+        runner.is_hypothesis_test = True
+        return runner
+
+    return deco

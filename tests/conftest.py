@@ -1,8 +1,36 @@
+import importlib.util
 import os
+import sys
+import tempfile
+import warnings
 
 # Tests run on the single real CPU device (the 512-device dry-run sets its
 # own XLA_FLAGS in repro.launch.dryrun, never globally).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Hermetic kernel dispatch: never read the developer's ~/.cache autotune
+# entries (a stale entry could route CPU tests through interpret-mode Pallas)
+# or an exported policy pin.  Tests that exercise these knobs set them
+# explicitly (tmp_autotune_cache fixture / monkeypatch).
+os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(
+    tempfile.mkdtemp(prefix="repro-test-autotune-"), "autotune.json")
+os.environ.pop("REPRO_TERNARY_POLICY", None)
+
+# Optional dev deps degrade to skip/fallback instead of collection errors.
+# CI installs requirements-dev.txt and exercises the real hypothesis; a bare
+# environment gets the deterministic subset shim in tests/_minihypothesis.py
+# (unsupported strategies skip-with-reason rather than hard-error).
+if importlib.util.find_spec("hypothesis") is None:
+    _here = os.path.dirname(__file__)
+    if _here not in sys.path:
+        sys.path.insert(0, _here)
+    import _minihypothesis
+
+    sys.modules["hypothesis"] = _minihypothesis
+    sys.modules["hypothesis.strategies"] = _minihypothesis.strategies  # type: ignore[assignment]
+    warnings.warn("hypothesis not installed; using tests/_minihypothesis.py "
+                  "deterministic fallback (pip install -r requirements-dev.txt "
+                  "for the real property-based runs)")
 
 import jax
 import numpy as np
@@ -17,3 +45,15 @@ def rng():
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture()
+def tmp_autotune_cache(tmp_path, monkeypatch):
+    """Point the dispatch autotune cache at a throwaway file."""
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    from repro.kernels import dispatch
+
+    dispatch.reset_autotune_cache()
+    yield path
+    dispatch.reset_autotune_cache()

@@ -1,0 +1,301 @@
+"""Unified ternary-matmul dispatch: differential matrix, selection
+properties, autotune-cache behavior, and serving end-to-end.
+
+The differential matrix is the cross-kernel equivalence oracle: every
+registered kernel must match the pure-jnp ``repro.kernels.ref`` oracle within
+dtype-appropriate tolerance, across shapes, activation dtypes (fp32 / bf16 /
+fp16 / int8), and LUT fetch modes.  The property tests pin the dispatch
+invariant that ``policy="auto"`` always resolves to a registered,
+constraint-satisfying kernel — with or without cache entries, on any backend.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import dispatch as dp
+from repro.kernels import ref as ref_oracle
+
+KERNELS = sorted(dp.kernel_names())
+DTYPES = ["float32", "bfloat16", "float16", "int8"]
+SHAPES = [(1, 15, 9), (4, 64, 32), (8, 60, 33)]
+#: int8 activations: every path accumulates exactly (int32 or f32 on small
+#: ints) → bit-exact.  Float paths differ only by output-cast rounding.
+TOL = {
+    "float32": dict(rtol=3e-5, atol=3e-5),
+    "bfloat16": dict(rtol=2e-2, atol=8e-2),
+    "float16": dict(rtol=4e-3, atol=2e-2),
+    "int8": dict(rtol=0, atol=0),
+}
+
+
+def _problem(m, k, n, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    w_t = jnp.asarray(rng.integers(-1, 2, size=(n, k)), jnp.int8)
+    if dtype == "int8":
+        x = jnp.asarray(rng.integers(-127, 128, size=(m, k)), jnp.int8)
+        scale = 1.0
+    else:
+        x = jnp.asarray(rng.normal(size=(m, k)), dtype)
+        scale = 0.7
+    tw = dp.TernaryWeight.from_ternary(w_t, scale)
+    ref = np.asarray(
+        ref_oracle.signflip_matmul_ref(x.astype(jnp.float32), w_t) * scale)
+    return x, tw, ref
+
+
+# ---------------------------------------------------------------------------
+# differential matrix: every kernel ≡ ref
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_kernel_matches_ref(kernel, dtype, m, k, n):
+    spec = dp.get_kernel(kernel)
+    if not spec.supports(m, k, n, dtype):
+        pytest.skip(f"{kernel} does not support {dtype}")
+    x, tw, ref = _problem(m, k, n, dtype)
+    y = np.asarray(dp.ternary_matmul(x, tw, policy=f"fixed:{kernel}"),
+                   np.float32)
+    np.testing.assert_allclose(y, ref, **TOL[dtype])
+
+
+@pytest.mark.parametrize("mu", [1, 2, 4, 5])
+@pytest.mark.parametrize("kernel", ["lut_onehot", "lut_gather"])
+def test_lut_fetch_modes_across_mu(kernel, mu):
+    x, tw, ref = _problem(3, 30, 17, "float32")
+    y = np.asarray(dp.ternary_matmul(x, tw, policy=f"fixed:{kernel}", mu=mu))
+    np.testing.assert_allclose(y, ref, **TOL["float32"])
+
+
+def test_dispatch_under_jit_matches_eager():
+    """Weights arriving as jit arguments (the serving path) must not leak
+    tracers through the lazy encoding cache."""
+    x, tw, ref = _problem(4, 40, 21, "float32")
+    packed, scale, k = tw.packed(), tw.scale, tw.in_features
+
+    @jax.jit
+    def f(xx, pk):
+        w = dp.TernaryWeight.from_packed(pk, scale, k)
+        return dp.ternary_matmul(xx, w, policy="fixed:lut_onehot")
+
+    np.testing.assert_allclose(np.asarray(f(x, packed)), ref, **TOL["float32"])
+    # second trace with a different fixed kernel reuses nothing stale
+    @jax.jit
+    def g(xx, pk):
+        w = dp.TernaryWeight.from_packed(pk, scale, k)
+        return dp.ternary_matmul(xx, w, policy="fixed:lut_gather")
+
+    np.testing.assert_allclose(np.asarray(g(x, packed)), ref, **TOL["float32"])
+
+
+def test_weight_container_roundtrips():
+    x, tw, ref = _problem(2, 25, 11, "float32")
+    # packed -> trits -> keys all describe the same matrix
+    tw2 = dp.TernaryWeight.from_packed(tw.packed(), tw.scale, tw.in_features)
+    assert np.array_equal(np.asarray(tw2.trits()), np.asarray(tw.trits()))
+    assert np.array_equal(np.asarray(tw2.keys(3)), np.asarray(tw.keys(3)))
+    y = dp.ternary_matmul(x, tw2, policy="fixed:dequant_packed")
+    np.testing.assert_allclose(np.asarray(y), ref, **TOL["float32"])
+
+
+# ---------------------------------------------------------------------------
+# selection properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 96), st.integers(1, 96),
+       st.sampled_from(DTYPES), st.sampled_from(["cpu", "tpu", "gpu"]))
+def test_auto_always_returns_valid_kernel(m, k, n, dtype, backend):
+    empty = dp.AutotuneCache(path="/nonexistent/autotune.json")
+    for policy in ("auto", "prior"):
+        spec = dp.select_kernel(m, k, n, dtype, policy=policy,
+                                backend=backend, cache=empty)
+        assert spec.name in dp.REGISTRY
+        assert spec.supports(m, k, n, dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 32), st.integers(1, 64), st.integers(1, 64),
+       st.sampled_from(KERNELS))
+def test_auto_honors_cache_best_when_eligible(m, k, n, kernel):
+    cache = dp.AutotuneCache(path="/nonexistent/autotune.json")
+    for name in KERNELS:
+        cache.record(m, k, n, "float32", "cpu", name,
+                     1.0 if name == kernel else 1e6)
+    spec = dp.select_kernel(m, k, n, "float32", policy="auto", backend="cpu",
+                            cache=cache)
+    if dp.get_kernel(kernel).supports(m, k, n, "float32"):
+        assert spec.name == kernel
+    else:  # ineligible best (w2a8 on float) falls back to a valid kernel
+        assert spec.supports(m, k, n, "float32")
+
+
+def test_fixed_policy_validation():
+    with pytest.raises(KeyError, match="unknown kernel"):
+        dp.select_kernel(2, 8, 8, "float32", policy="fixed:nope")
+    with pytest.raises(ValueError, match="does not support"):
+        dp.select_kernel(2, 8, 8, "float32", policy="fixed:w2a8")
+    with pytest.raises(ValueError, match="unknown policy"):
+        dp.select_kernel(2, 8, 8, "float32", policy="fastest")
+
+
+def test_prior_tracks_paper_structure():
+    """The static prior inherits the paper's findings: at FP16 compute the
+    LUT datapath beats dequant and sign-flip; packed paths win the
+    bandwidth-bound (small-M) regime over dense-bf16 streaming."""
+    on_tpu = functools.partial(dp.static_prior, m=256, k=4096, n=4096,
+                               act_dtype="float16", backend="tpu")
+    lut = on_tpu(dp.get_kernel("lut_onehot"))
+    assert lut < on_tpu(dp.get_kernel("dequant_packed"))
+    assert lut < on_tpu(dp.get_kernel("signflip"))
+    # decode shape (M=1): 1.6 b/w streaming beats 16 b/w dense ref
+    dec = functools.partial(dp.static_prior, m=1, k=4096, n=4096,
+                            act_dtype="float16", backend="tpu")
+    assert dec(dp.get_kernel("dequant_packed")) < dec(dp.get_kernel("ref"))
+
+
+def test_env_var_policy(monkeypatch):
+    monkeypatch.setenv(dp.DEFAULT_POLICY_ENV, "fixed:signflip")
+    assert dp.select_kernel(2, 16, 8, "float32", policy=None).name == "signflip"
+
+
+# ---------------------------------------------------------------------------
+# autotune cache
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_cache_roundtrip(tmp_autotune_cache):
+    cache = dp.get_autotune_cache()
+    assert str(tmp_autotune_cache) == cache.path
+    cache.record(4, 32, 16, "float32", "cpu", "signflip", 11.0)
+    cache.record(4, 32, 16, "float32", "cpu", "ref", 99.0)
+    cache.save()
+    reloaded = dp.AutotuneCache.load(cache.path)
+    assert reloaded.best(4, 32, 16, "float32", "cpu") == "signflip"
+    assert reloaded.timings(4, 32, 16, "float32", "cpu")["ref"] == 99.0
+    # stale kernels in a cache file never dispatch
+    reloaded.record(4, 32, 16, "float32", "cpu", "deleted_kernel", 0.1)
+    assert reloaded.best(4, 32, 16, "float32", "cpu") == "signflip"
+
+
+def test_autotune_measures_and_dispatch_uses_it(tmp_autotune_cache):
+    timings = dp.autotune(2, 20, 9, "float32", reps=1,
+                          kernels=["ref", "signflip"])
+    assert set(timings) == {"ref", "signflip"}
+    assert all(t > 0 for t in timings.values())
+    assert tmp_autotune_cache.exists()
+    best = min(timings, key=timings.get)
+    spec = dp.select_kernel(2, 20, 9, "float32", policy="auto")
+    assert spec.name == best
+    # and the full entry survives a cold reload
+    dp.reset_autotune_cache()
+    assert dp.select_kernel(2, 20, 9, "float32", policy="auto").name == best
+
+
+def test_corrupt_cache_file_is_ignored(tmp_autotune_cache):
+    tmp_autotune_cache.write_text("{not json")
+    cache = dp.AutotuneCache.load(str(tmp_autotune_cache))
+    assert len(cache) == 0
+
+
+# ---------------------------------------------------------------------------
+# serving end-to-end
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def packed_smoke_model():
+    from repro.configs.registry import get_smoke_config
+    from repro.models.decode import quantize_for_serving
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("qwen3-0.6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, quantize_for_serving(params, cfg)
+
+
+def test_engine_end_to_end_policy_auto(packed_smoke_model, tmp_autotune_cache):
+    from repro.serving.engine import DecodeEngine, Request
+
+    cfg, sp = packed_smoke_model
+    eng = DecodeEngine(sp, cfg, batch_size=2, max_len=32,
+                       matmul_policy="auto")
+    reqs = eng.run([Request(prompt=[3, 4, 5], max_new_tokens=4),
+                    Request(prompt=[7, 8], max_new_tokens=4)])
+    assert [len(r.out) for r in reqs] == [4, 4]
+    assert all(0 <= t < cfg.padded_vocab for r in reqs for t in r.out)
+    # reproducibility pin: a fixed ref dispatch decodes identical tokens
+    pin = DecodeEngine(sp, cfg, batch_size=2, max_len=32,
+                       matmul_policy="fixed:ref")
+    reqs_pin = pin.run([Request(prompt=[3, 4, 5], max_new_tokens=4),
+                        Request(prompt=[7, 8], max_new_tokens=4)])
+    assert [r.out for r in reqs_pin] == [r.out for r in reqs]
+
+
+def test_engine_autotune_shapes(packed_smoke_model, tmp_autotune_cache):
+    from repro.models.decode import layer_matmul_shapes
+    from repro.serving.engine import DecodeEngine
+
+    cfg, sp = packed_smoke_model
+    eng = DecodeEngine(sp, cfg, batch_size=2, max_len=32)
+    results = eng.autotune_shapes(reps=1, kernels=["ref", "signflip"])
+    assert sorted(results) == layer_matmul_shapes(cfg, 2)
+    cache = dp.get_autotune_cache()
+    for (m, k, n) in results:
+        assert cache.best(m, k, n, cfg.dtype, jax.default_backend()) is not None
+
+
+def test_layer_matmul_shapes_cover_real_dispatch(packed_smoke_model,
+                                                 monkeypatch):
+    """Drift guard: every (M, K, N) the serving step actually dispatches must
+    be enumerated by layer_matmul_shapes — the hand-written shape arithmetic
+    is only trustworthy while this holds."""
+    import jax.numpy as jnp
+
+    from repro.models.decode import decode_step, layer_matmul_shapes, prefill
+
+    cfg, sp = packed_smoke_model
+    B, S = 2, 8
+    seen: set[tuple[int, int, int]] = set()
+    orig = dp.select_kernel
+
+    def spy(m, k, n, act_dtype, **kw):
+        seen.add((m, k, n))
+        return orig(m, k, n, act_dtype, **kw)
+
+    monkeypatch.setattr(dp, "select_kernel", spy)
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    cache, _ = jax.eval_shape(
+        lambda p, b: prefill(p, cfg, b, s_max=16), sp, batch)
+    prefill_seen = set(seen)
+    assert prefill_seen, "prefill dispatched no ternary matmuls"
+    assert prefill_seen <= set(layer_matmul_shapes(cfg, B, seq_len=S))
+
+    seen.clear()
+    jax.eval_shape(
+        lambda p, c: decode_step(p, cfg, c, jnp.zeros((B,), jnp.int32),
+                                 jnp.asarray(S, jnp.int32)), sp, cache)
+    assert seen, "decode dispatched no ternary matmuls"
+    assert seen <= set(layer_matmul_shapes(cfg, B))
+
+
+def test_layer_matmul_shapes_scale_with_batch():
+    from repro.configs.registry import get_smoke_config
+    from repro.models.decode import layer_matmul_shapes
+
+    cfg = get_smoke_config("qwen3-0.6b")
+    s1 = layer_matmul_shapes(cfg, 1)
+    s8 = layer_matmul_shapes(cfg, 1, seq_len=8)
+    assert {(k, n) for _, k, n in s1} == {(k, n) for _, k, n in s8}
+    assert all(m == 1 for m, _, _ in s1)
+    assert all(m == 8 for m, _, _ in s8)
+    d = cfg.d_model
+    assert (1, d, cfg.q_dim) in s1 and (1, cfg.d_ff, d) in s1

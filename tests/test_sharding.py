@@ -15,8 +15,17 @@ from repro.models.model import init_params
 from repro.optim.optimizers import make_optimizer
 from repro.parallel import sharding as sh
 
-MESHES = [AbstractMesh((16, 16), ("data", "model")),
-          AbstractMesh((2, 16, 16), ("pod", "data", "model"))]
+def _abstract_mesh(sizes, names):
+    """AbstractMesh across JAX versions: new signature takes (name, size)
+    pairs; pre-0.4.36 took (shape_tuple, axis_names)."""
+    try:
+        return AbstractMesh(tuple(zip(names, sizes)))
+    except TypeError:
+        return AbstractMesh(sizes, names)
+
+
+MESHES = [_abstract_mesh((16, 16), ("data", "model")),
+          _abstract_mesh((2, 16, 16), ("pod", "data", "model"))]
 
 
 def _check_divisible(tree_sds, tree_specs, mesh):
