@@ -1,0 +1,140 @@
+"""Serving throughput: continuous-batching scheduler vs generational batching
+on a skewed-length workload — the case where generational batching collapses
+(every batch turns over at the pace of its slowest request, so a few long
+requests leave most slots idle most of the time).
+
+Bitnet.cpp and TENET report end-to-end ternary decode tok/s as the headline
+metric; this benchmark seeds the same trajectory for this repo.  Both paths
+run the identical packed-ternary model through the identical jitted
+decode_step — only the batching discipline differs — so the ratio isolates
+scheduling, not kernels.
+
+Writes ``BENCH_serving.json`` (schema below) for CI to surface in PRs:
+
+  {"schema_version": 1, "arch": ..., "batch": ..., "workload": {...},
+   "generational": {"tokens": N, "seconds": s, "tok_s": r, "decode_steps": d},
+   "continuous":   {... same keys ...},
+   "speedup": continuous.tok_s / generational.tok_s}
+
+Run:  PYTHONPATH=src python benchmarks/serving_bench.py --smoke
+      (CPU-friendly reduced config; full mode uses the registry smoke config
+      unreduced).  Prompts share one length so each path compiles exactly one
+      prefill + one decode step; compile time is excluded via a warmup pass.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.configs.registry import get_smoke_config
+from repro.models.decode import quantize_for_serving
+from repro.models.model import init_params
+from repro.serving.engine import DecodeEngine, Request
+from repro.serving.scheduler import ContinuousScheduler
+
+
+def make_requests(n: int, short_new: int, long_new: int, long_every: int,
+                  prompt_len: int, vocab: int) -> list[Request]:
+    """Many short + few long (every ``long_every``-th request), fixed prompt
+    length (one compile), varied prompt contents."""
+    reqs = []
+    for i in range(n):
+        new = long_new if i % long_every == long_every - 1 else short_new
+        prompt = [2 + ((7 * i + j) % (vocab - 3)) for j in range(prompt_len)]
+        reqs.append(Request(prompt=prompt, max_new_tokens=new))
+    return reqs
+
+
+def run_generational(engine: DecodeEngine, reqs: list[Request]) -> int:
+    """Seed baseline: batches of B run to the slowest request, sequentially."""
+    steps = 0
+    for i in range(0, len(reqs), engine.B):
+        chunk = reqs[i:i + engine.B]
+        engine.run(chunk)
+        steps += max(len(r.out) for r in chunk)
+    return steps
+
+
+def run_continuous(engine: DecodeEngine, reqs: list[Request]) -> int:
+    sched = ContinuousScheduler(engine)
+    for r in reqs:
+        sched.submit(r)
+    sched.run(max_steps=100_000)
+    return sched.stats.steps
+
+
+def bench(path_fn, engine, mk_reqs) -> dict:
+    path_fn(engine, mk_reqs())  # warmup: compile prefill + decode step
+    reqs = mk_reqs()
+    t0 = time.perf_counter()
+    steps = path_fn(engine, reqs)
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.out) for r in reqs)
+    assert all(r.done or len(r.out) == r.max_new_tokens for r in reqs)
+    return {"tokens": tokens, "seconds": round(dt, 4),
+            "tok_s": round(tokens / dt, 2), "decode_steps": steps}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="bitnet-b1.58-2b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CPU-friendly reduction (CI mode)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--short-new", type=int, default=2)
+    ap.add_argument("--long-new", type=int, default=32)
+    ap.add_argument("--long-every", type=int, default=4,
+                    help="every k-th request is long (skew knob)")
+    ap.add_argument("--prompt-len", type=int, default=3)
+    ap.add_argument("--policy", default="auto",
+                    help="ternary-matmul dispatch policy for both paths")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    if args.smoke:
+        cfg = cfg.with_(n_layers=2, d_model=128, n_heads=2, n_kv_heads=2,
+                        head_dim=64, d_ff=256, vocab_size=512, loss_chunk=64)
+    max_len = args.prompt_len + args.long_new + 1
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    served = quantize_for_serving(params, cfg)
+
+    def mk_reqs():
+        return make_requests(args.requests, args.short_new, args.long_new,
+                             args.long_every, args.prompt_len, cfg.vocab_size)
+
+    results = {"schema_version": 1, "arch": cfg.name, "batch": args.batch,
+               "policy": args.policy, "smoke": bool(args.smoke),
+               "workload": {"requests": args.requests,
+                            "short_new": args.short_new,
+                            "long_new": args.long_new,
+                            "long_every": args.long_every,
+                            "prompt_len": args.prompt_len}}
+    for name, fn in [("generational", run_generational),
+                     ("continuous", run_continuous)]:
+        # fresh engine per path: identical PRNG/jit state, no cross-warming
+        engine = DecodeEngine(served, cfg, batch_size=args.batch,
+                              max_len=max_len, matmul_policy=args.policy)
+        results[name] = bench(fn, engine, mk_reqs)
+        print(f"[serving_bench] {name:>12}: {results[name]['tokens']} tok in "
+              f"{results[name]['seconds']:.2f}s = {results[name]['tok_s']:.1f} "
+              f"tok/s ({results[name]['decode_steps']} decode steps)")
+
+    results["speedup"] = round(
+        results["continuous"]["tok_s"] / results["generational"]["tok_s"], 3)
+    print(f"[serving_bench] continuous / generational speedup: "
+          f"{results['speedup']:.2f}x")
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+        f.write("\n")
+    print(f"[serving_bench] wrote {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,14 @@
 """Serving launcher: load (or initialize) a model, quantize to the packed
-1.6-bit artifact, and run batched generation.
+1.6-bit artifact, and serve batched generation through the
+continuous-batching scheduler (default) or the generational baseline.
 
 On a pod this runs one process per host against the production mesh; on this
 container it exercises the identical code path on local devices.
 
 Usage:
   python -m repro.launch.serve --arch bitnet-b1.58-2b --smoke \
-      [--ckpt-dir DIR] [--batch 4] [--new-tokens 32] [--temperature 0.8]
+      [--ckpt-dir DIR] [--batch 4] [--new-tokens 32] [--temperature 0.8] \
+      [--discipline continuous|generational] [--stream]
 """
 
 from __future__ import annotations
@@ -21,6 +23,7 @@ from repro.configs.registry import get_config, get_smoke_config
 from repro.models.decode import packed_bits_per_weight, quantize_for_serving
 from repro.models.model import init_params
 from repro.serving.engine import DecodeEngine, Request, SamplerConfig
+from repro.serving.scheduler import ContinuousScheduler
 
 
 def main():
@@ -30,9 +33,16 @@ def main():
     ap.add_argument("--ckpt-dir", help="restore trained params (else random init)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="number of requests (default: --batch; may exceed "
+                    "it — the scheduler queues and refills slots)")
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--discipline", choices=["continuous", "generational"],
+                    default="continuous")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are emitted (continuous only)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -51,14 +61,31 @@ def main():
                           max_len=args.max_len,
                           sampler=SamplerConfig(temperature=args.temperature,
                                                 top_k=args.top_k))
+    n_req = args.requests if args.requests is not None else args.batch
     reqs = [Request(prompt=[7 + i, 13 + i], max_new_tokens=args.new_tokens)
-            for i in range(args.batch)]
+            for i in range(n_req)]
+
     t0 = time.time()
-    out = engine.run(reqs)
+    if args.discipline == "generational":
+        if n_req > args.batch:
+            raise SystemExit("[serve] generational cannot queue: "
+                             "--requests must be <= --batch")
+        engine.run(reqs)
+        steps = max(len(r.out) for r in reqs)
+    else:
+        ids = {id(r): i for i, r in enumerate(reqs)}
+        on_token = (lambda r, t: print(f"  [stream] req {ids[id(r)]}: {t}")) \
+            if args.stream else None
+        sched = ContinuousScheduler(engine, on_token=on_token)
+        for r in reqs:
+            sched.submit(r)
+        sched.run()
+        steps = sched.stats.steps
     dt = time.time() - t0
-    n = sum(len(r.out) for r in out)
-    print(f"[serve] {n} tokens in {dt:.1f}s ({n / dt:.1f} tok/s)")
-    for i, r in enumerate(out):
+    n = sum(len(r.out) for r in reqs)
+    print(f"[serve] {args.discipline}: {n} tokens / {steps} decode steps "
+          f"in {dt:.1f}s ({n / dt:.1f} tok/s)")
+    for i, r in enumerate(reqs):
         print(f"  [{i}] {r.out}")
 
 

@@ -10,6 +10,11 @@ decode win that motivates the whole accelerator line (§I).
 Caches use a ring buffer when the config has a sliding ``window`` (zamba2's
 shared attention at 500k context), with absolute-position slots so RoPE'd
 keys stay valid after wraparound.
+
+Decode is continuous-batching ready: ``decode_step`` takes a per-slot
+position vector ``index: [B]`` (each row masks/advances independently) and
+``prefill_into_slot`` splices a single freshly-prefilled request into one
+batch row of a live cache — see :mod:`repro.serving.scheduler`.
 """
 
 from __future__ import annotations
@@ -166,7 +171,9 @@ def init_cache(cfg: ModelConfig, B: int, s_max: int, dtype=jnp.bfloat16) -> dict
     kv = lambda n: {
         "k": jnp.zeros((n, B, CL, cfg.n_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((n, B, CL, cfg.n_kv_heads, cfg.head_dim), dtype),
-        "pos": jnp.full((n, CL), -1, jnp.int32),
+        # per-row slot positions: continuous batching gives every batch row
+        # its own position trajectory (-1 = empty slot)
+        "pos": jnp.full((n, B, CL), -1, jnp.int32),
     }
     if cfg.is_encdec:
         c = kv(cfg.n_layers)
@@ -371,6 +378,29 @@ def prefill(p: Params, cfg: ModelConfig, batch: dict, s_max: int):
     raise ValueError(cfg.block_pattern)
 
 
+def prefill_into_slot(p: Params, cfg: ModelConfig, cache: dict, batch: dict,
+                      slot: jax.Array, s_max: int):
+    """Prefill ONE request and splice its KV/state rows into batch row
+    ``slot`` of a live multi-slot ``cache`` — the continuous-batching refill
+    path: a finished slot is re-armed mid-flight without touching (or
+    re-prefilling) any other row.
+
+    ``batch["tokens"]`` must have leading batch dim 1; ``slot`` is a (possibly
+    traced) int32 row index.  Every cache leaf carries the batch on axis 1
+    (``[layers, B, ...]``), so the splice is one dynamic_update_slice per
+    leaf — rows other than ``slot`` are bit-identical afterwards, a live
+    neighbour can never be clobbered.  Returns ``(cache, logits [V])`` with
+    the last-prompt-position logits, ready to sample the slot's first token.
+    """
+    cache1, logits = prefill(p, cfg, batch, s_max=s_max)
+
+    def splice(big, one):
+        idx = (0, slot) + (0,) * (big.ndim - 2)
+        return jax.lax.dynamic_update_slice(big, one.astype(big.dtype), idx)
+
+    return jax.tree.map(splice, cache, cache1), logits[0]
+
+
 # ---------------------------------------------------------------------------
 # decode
 # ---------------------------------------------------------------------------
@@ -378,20 +408,31 @@ def prefill(p: Params, cfg: ModelConfig, batch: dict, s_max: int):
 
 def decode_step(p: Params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
                 index: jax.Array):
-    """One decode step.  tokens: [B]; index: scalar int32 (current position).
+    """One decode step.  tokens: [B]; index: int32 [B] per-slot positions (a
+    scalar broadcasts — every row at the same position, the generational
+    case).  With per-slot positions each batch row advances independently:
+    its attention mask, RoPE angles, ring slot, and cache writes all derive
+    from its own ``index[b]``, so a continuous-batching scheduler can refill
+    finished rows mid-flight (see :func:`prefill_into_slot`).
 
-    Returns (logits [B, V], new_cache).
+    Rows whose position is out of cache range scatter-drop their KV write
+    (dead slots held by a scheduler are harmless).  Returns
+    (logits [B, V], new_cache).
     """
     B = tokens.shape[0]
+    index = jnp.asarray(index, jnp.int32)
+    if index.ndim == 0:
+        index = jnp.broadcast_to(index, (B,))
     CL = cache["pos"].shape[-1] if "pos" in cache else 0
-    slot = (index % CL) if (cfg.window and CL) else index
-    positions = index[None].astype(jnp.int32) if hasattr(index, "shape") else jnp.asarray([index], jnp.int32)
+    slot = (index % CL) if (cfg.window and CL) else index  # [B]
+    positions = index[:, None]  # [B, 1] per-row query positions
+    rows = jnp.arange(B)
     h = embed_tokens(p, cfg, tokens[:, None])
 
     if cfg.is_encdec:
-        h = h + sinusoidal_position_at(index, cfg.d_model, h.dtype)[None, None]
-        new_pos = cache["pos"].at[:, slot].set(index)
-        kpos = new_pos[0]
+        h = h + sinusoidal_position_at(index, cfg.d_model, h.dtype)[:, None]
+        new_pos = cache["pos"].at[:, rows, slot].set(index)
+        kpos = new_pos[0]  # [B, CL]
         enc_pos = jnp.arange(cfg.enc_seq)
 
         def body(x, xs):
@@ -413,8 +454,8 @@ def decode_step(p: Params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
         cache = dict(cache, k=ks, v=vs, pos=new_pos)
 
     elif cfg.block_pattern == "attn":
-        new_pos = cache["pos"].at[:, slot].set(index)
-        kpos = new_pos[0]
+        new_pos = cache["pos"].at[:, rows, slot].set(index)
+        kpos = new_pos[0]  # [B, CL]
 
         def block_step(x, blk, ck, cv, is_moe):
             hn = rms_norm(blk["ln1"], x, offset=cfg.rmsnorm_offset)
@@ -463,7 +504,7 @@ def decode_step(p: Params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
             # mirrors on backends that upcast bf16 dots) — measured 17
             # GB/layer on gemma-7b decode_32k (EXPERIMENTS.md §Perf it.3).
             from repro.models.layers import _sdpa, linear as _lin, rope as _rope
-            old_pos = cache["pos"][0]  # pre-update slot positions (-1 = empty)
+            old_pos = cache["pos"][0]  # [B, CL] pre-update positions (-1 = empty)
 
             def body(x, xs):
                 blk, ck, cv = xs
@@ -493,18 +534,19 @@ def decode_step(p: Params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
 
             h, (k_new, v_new) = jax.lax.scan(
                 body, h, (p["blocks"], cache["k"], cache["v"]))
-            # one batched in-place write: all layers' new tokens at `slot`
-            ks = jax.lax.dynamic_update_slice(
-                cache["k"], k_new.astype(cache["k"].dtype), (0, 0, slot, 0, 0))
-            vs = jax.lax.dynamic_update_slice(
-                cache["v"], v_new.astype(cache["v"].dtype), (0, 0, slot, 0, 0))
+            # one batched in-place write: all layers' new tokens, each batch
+            # row at its own `slot[b]` (scatter; out-of-range rows drop)
+            ks = cache["k"].at[:, rows, slot].set(
+                k_new[:, :, 0].astype(cache["k"].dtype))
+            vs = cache["v"].at[:, rows, slot].set(
+                v_new[:, :, 0].astype(cache["v"].dtype))
         cache = dict(cache, k=ks, v=vs, pos=new_pos)
 
     elif cfg.block_pattern == "zamba2":
         g = cfg.attn_every
         groups = cfg.n_layers // g
-        new_pos = cache["pos"].at[:, slot].set(index)
-        kpos = new_pos[0]
+        new_pos = cache["pos"].at[:, rows, slot].set(index)
+        kpos = new_pos[0]  # [B, CL]
         stacked = jax.tree.map(lambda x: x.reshape(groups, g, *x.shape[1:]),
                                p["mamba_blocks"])
         sst = cache["ssm"].reshape(groups, g, *cache["ssm"].shape[1:])

@@ -128,12 +128,18 @@ def init_attention(key, cfg: ModelConfig, *, stack=()) -> Params:
 
 
 def _chunk_mask(qp: jax.Array, kp: jax.Array, kind: str, window: int):
-    """[qc, kc] bool validity from absolute positions (kp = -1 ⇒ empty slot)."""
-    valid = kp[None, :] >= 0
+    """[B?, qc, kc] bool validity from absolute positions (kp = -1 ⇒ empty
+    slot).  qp/kp are [qc]/[kc] shared over the batch, or [B, qc]/[B, kc]
+    per-slot (continuous batching: every batch row at its own position)."""
+    if qp.ndim == 1:
+        qp = qp[None]
+    if kp.ndim == 1:
+        kp = kp[None]
+    valid = kp[:, None, :] >= 0
     if kind == "causal":
-        valid &= kp[None, :] <= qp[:, None]
+        valid &= kp[:, None, :] <= qp[:, :, None]
         if window:
-            valid &= kp[None, :] > qp[:, None] - window
+            valid &= kp[:, None, :] > qp[:, :, None] - window
     return valid
 
 
@@ -142,8 +148,10 @@ def _sdpa(q, k, v, cfg: ModelConfig, *, q_pos, k_pos, kind: str = "causal",
           extra_kv=None):
     """Flash-style chunked attention with online softmax.
 
-    q: [B,Sq,H,hd]; k/v: [B,Sk,Hkv,hd]; q_pos [Sq], k_pos [Sk] absolute
-    positions (k_pos = -1 marks empty cache slots).  Memory is
+    q: [B,Sq,H,hd]; k/v: [B,Sk,Hkv,hd]; q_pos [Sq] or [B,Sq], k_pos [Sk] or
+    [B,Sk] absolute positions (k_pos = -1 marks empty cache slots; batched
+    forms give each row its own positions — per-slot continuous decode).
+    Memory is
     O(B·H·chunk_q·chunk_k) instead of O(B·H·Sq·Sk) — required for the 32k/500k
     shapes to fit HBM; on real TPU this is where a fused flash kernel slots
     in.  ``kind``: "causal" (+optional sliding window) or "full" (cross-attn).
@@ -152,15 +160,17 @@ def _sdpa(q, k, v, cfg: ModelConfig, *, q_pos, k_pos, kind: str = "causal",
     Sk = k.shape[1]
     Hkv = k.shape[2]
     rep = H // Hkv
+    q_pos = jnp.atleast_2d(jnp.asarray(q_pos))  # [1 or B, Sq]
+    k_pos = jnp.atleast_2d(jnp.asarray(k_pos))  # [1 or B, Sk]
     cq, ck = min(chunk_q, Sq), min(chunk_k, Sk)
     pad_q, pad_k = (-Sq) % cq, (-Sk) % ck
     if pad_q:
         q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
-        q_pos = jnp.pad(q_pos, (0, pad_q))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)))
     if pad_k:
         k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
-        k_pos = jnp.pad(k_pos, (0, pad_k), constant_values=-1)
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad_k)), constant_values=-1)
     nq, nk = (Sq + pad_q) // cq, (Sk + pad_k) // ck
     scale = 1.0 / math.sqrt(hd)
 
@@ -172,14 +182,14 @@ def _sdpa(q, k, v, cfg: ModelConfig, *, q_pos, k_pos, kind: str = "causal",
     # EXPERIMENTS.md §Perf).  Slicing keeps per-step traffic at one chunk.
     def q_chunk(_, qi):
         qb = jax.lax.dynamic_slice_in_dim(q, qi * cq, cq, axis=1)
-        qp = jax.lax.dynamic_slice_in_dim(q_pos, qi * cq, cq, axis=0)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, qi * cq, cq, axis=1)
         qb = qb.reshape(B, cq, Hkv, rep, hd)
 
         def merge_chunk(carry, kb, vb, kp):
             m, l, acc = carry
             s = jnp.einsum("bqkrd,bskd->bkrqs", qb, kb).astype(jnp.float32) * scale
-            valid = _chunk_mask(qp, kp, kind, window)
-            s = jnp.where(valid[None, None, None], s, -1e30)
+            valid = _chunk_mask(qp, kp, kind, window)  # [1 or B, cq, kc]
+            s = jnp.where(valid[:, None, None], s, -1e30)
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -191,7 +201,7 @@ def _sdpa(q, k, v, cfg: ModelConfig, *, q_pos, k_pos, kind: str = "causal",
         def kv_step(carry, ki):
             kb = jax.lax.dynamic_slice_in_dim(k, ki * ck, ck, axis=1)
             vb = jax.lax.dynamic_slice_in_dim(v, ki * ck, ck, axis=1)
-            kp = jax.lax.dynamic_slice_in_dim(k_pos, ki * ck, ck, axis=0)
+            kp = jax.lax.dynamic_slice_in_dim(k_pos, ki * ck, ck, axis=1)
             return merge_chunk(carry, kb, vb, kp), None
 
         init = (jnp.full((B, Hkv, rep, cq), -1e30, jnp.float32),
@@ -224,11 +234,15 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
     Training/prefill: ``kv=None, cache=None`` — keys/values from ``x``;
                       ``k_positions`` defaults to ``positions``.
     Cross-attention:  ``kv=(k, v)`` precomputed (whisper), ``kind="full"``.
-    Decode:           ``cache=(k_cache, v_cache)`` updated at ``cache_index``;
+    Decode:           ``cache=(k_cache, v_cache)`` updated at ``cache_index``
+                      (a scalar writes all rows at one slot; an int32 [B]
+                      vector writes each batch row at its own slot — the
+                      continuous-batching per-slot form, Sq must be 1);
                       ``k_positions`` = cache slot positions (-1 = empty);
                       returns (out, new_cache).
 
-    ``positions``: [Sq] absolute query positions (1-D, shared over batch).
+    ``positions``: [Sq] absolute query positions shared over the batch, or
+    [B, Sq] per-row (continuous decode).
     """
     B, Sq, _ = x.shape
     q = linear(p["wq"], x, cfg).reshape(B, Sq, cfg.n_heads, cfg.head_dim)
@@ -249,8 +263,14 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
             k = rope(k, positions, cfg.rope_theta)
         if cache is not None:
             ck, cv = cache
-            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+            ci = jnp.asarray(cache_index)
+            if ci.ndim:  # per-slot [B] write positions (continuous decode)
+                rows = jnp.arange(B)
+                ck = ck.at[rows, ci].set(k[:, 0].astype(ck.dtype))
+                cv = cv.at[rows, ci].set(v[:, 0].astype(cv.dtype))
+            else:
+                ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, ci, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, ci, 0, 0))
             k, v, new_cache = ck, cv, (ck, cv)
 
     if k_positions is None:

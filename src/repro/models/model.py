@@ -156,12 +156,14 @@ def embed_tokens(p: Params, cfg: ModelConfig, tokens: jax.Array,
 
 
 def sinusoidal_position_at(index: jax.Array, D: int, dtype=jnp.bfloat16) -> jax.Array:
-    """Single-position sinusoidal embedding (decode path; index is traced)."""
+    """Sinusoidal embedding at traced position(s): scalar → [D], [B] → [B, D]
+    (decode path; the batched form carries per-slot positions)."""
+    idx = jnp.asarray(index, jnp.float32)
     div = jnp.exp(-math.log(10_000.0) * jnp.arange(0, D, 2, jnp.float32) / D)
-    ang = index.astype(jnp.float32) * div
-    pe = jnp.zeros((D,), jnp.float32)
-    pe = pe.at[0::2].set(jnp.sin(ang))
-    pe = pe.at[1::2].set(jnp.cos(ang))
+    ang = idx[..., None] * div
+    pe = jnp.zeros((*idx.shape, D), jnp.float32)
+    pe = pe.at[..., 0::2].set(jnp.sin(ang))
+    pe = pe.at[..., 1::2].set(jnp.cos(ang))
     return pe.astype(dtype)
 
 

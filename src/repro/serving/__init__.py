@@ -1,1 +1,8 @@
-"""repro.serving subsystem."""
+"""repro.serving subsystem: the batched decode engine and the
+continuous-batching scheduler that drives it."""
+
+from repro.serving.engine import DecodeEngine, Request, SamplerConfig
+from repro.serving.scheduler import ContinuousScheduler, ScheduleBackend
+
+__all__ = ["DecodeEngine", "Request", "SamplerConfig", "ContinuousScheduler",
+           "ScheduleBackend"]

@@ -9,20 +9,24 @@ The engine adds the serving substrate around the model's decode_step:
   * request batching with left-padded prompts of unequal length,
   * greedy / temperature / top-k sampling,
   * per-step token callbacks (streaming) and stop-token handling,
-  * continuous-batching slot reuse (a finished request's slot is refilled
-    by the next queued prompt at its prefill length).
+  * two batching disciplines: ``run`` (generational — the whole batch turns
+    over at the pace of its slowest request; kept as a simple oracle and
+    baseline) and ``serve`` (continuous — per-slot positions, finished slots
+    refilled mid-flight from a FIFO queue via
+    :class:`repro.serving.scheduler.ContinuousScheduler`).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.models.decode import decode_step, prefill
+from repro.models.decode import decode_step, init_cache, prefill, prefill_into_slot
 
 
 @dataclass
@@ -47,8 +51,16 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 32
     stop_token: int | None = None
+    #: streaming callback, fired as ``on_token(request, token)`` per emitted
+    #: token (overrides any scheduler-wide callback)
+    on_token: Callable[["Request", int], None] | None = None
     out: list[int] = field(default_factory=list)
     done: bool = False
+
+
+#: token fed to dead/padding slots (any in-vocab id works; outputs of those
+#: rows are never surfaced)
+PAD_TOKEN = 1
 
 
 class DecodeEngine:
@@ -64,10 +76,27 @@ class DecodeEngine:
         self.params = params
         self.cfg = cfg
         self.B = batch_size
+        self.batch_size = batch_size  # ScheduleBackend protocol name
         self.max_len = max_len
         self.sampler = sampler or SamplerConfig()
+        # cache buffers are donated on every decode path (callers always
+        # rebind the returned cache) so XLA updates KV in place
         self._step = jax.jit(
-            lambda p, c, t, i: decode_step(p, cfg, c, t, i))
+            lambda p, c, t, i: decode_step(p, cfg, c, t, i),
+            donate_argnums=(1,))
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, cfg, b, s_max=self.max_len))
+        # continuous-batching paths: refill one slot (retraces per prompt
+        # length) and the fused sample→mask→decode step.  The live cache /
+        # state is donated — callers always replace it with the returned
+        # value — so XLA updates the KV buffers in place instead of copying
+        # the whole cache every token (same convention as launch.dryrun).
+        self._prefill_slot = jax.jit(
+            lambda p, c, b, s: prefill_into_slot(p, cfg, c, b, s,
+                                                 s_max=self.max_len),
+            donate_argnums=(1,))
+        self._sched_step_fn = jax.jit(self._make_sched_step(),
+                                      donate_argnums=(1,))
         self._key = jax.random.PRNGKey(self.sampler.seed)
 
     def autotune_shapes(self, **autotune_kw) -> dict:
@@ -87,26 +116,44 @@ class DecodeEngine:
         cache.save()  # one write for the whole shape set
         return results
 
+    def _stub_inputs(self, B: int) -> dict:
+        extras: dict[str, Any] = {}
+        if self.cfg.frontend == "audio_stub":
+            extras["frames"] = jnp.zeros((B, self.cfg.enc_seq,
+                                          self.cfg.d_model), jnp.bfloat16)
+        if self.cfg.frontend == "vit_stub":
+            extras["vision_embeds"] = jnp.zeros(
+                (B, self.cfg.vision_tokens, self.cfg.d_model), jnp.bfloat16)
+        return extras
+
+    # ------------------------------------------------------------------
+    # generational batching (baseline / oracle path)
+    # ------------------------------------------------------------------
+
     def run(self, requests: list[Request]) -> list[Request]:
-        """Run a batch of requests to completion (simple generational
-        batching: all requests share one prompt length via left-trim)."""
-        assert len(requests) <= self.B
-        reqs = list(requests) + [Request(prompt=[1], max_new_tokens=0)
+        """Run a batch of requests to completion (generational batching: all
+        requests share one prompt length via left-trim and the batch turns
+        over at the pace of its slowest request — use :meth:`serve` for
+        continuous batching)."""
+        if len(requests) > self.B:
+            raise ValueError(
+                f"got {len(requests)} requests for batch_size {self.B}; "
+                "generational run() cannot queue — use serve() instead")
+        reqs = list(requests) + [Request(prompt=[PAD_TOKEN], max_new_tokens=0)
                                  for _ in range(self.B - len(requests))]
         plen = max(len(r.prompt) for r in reqs)
-        toks = np.ones((self.B, plen), np.int32)
+        max_new = max(r.max_new_tokens for r in reqs)
+        if not self.cfg.window and plen + max_new > self.max_len:
+            # out-of-range positions would silently scatter-drop KV writes
+            raise ValueError(
+                f"prompt ({plen}) + max_new_tokens ({max_new}) exceeds "
+                f"engine max_len {self.max_len}")
+        toks = np.full((self.B, plen), PAD_TOKEN, np.int32)
         for i, r in enumerate(reqs):
             toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
-        batch = {"tokens": jnp.asarray(toks)}
-        if self.cfg.frontend == "audio_stub":
-            batch["frames"] = jnp.zeros((self.B, self.cfg.enc_seq,
-                                         self.cfg.d_model), jnp.bfloat16)
-        if self.cfg.frontend == "vit_stub":
-            batch["vision_embeds"] = jnp.zeros(
-                (self.B, self.cfg.vision_tokens, self.cfg.d_model), jnp.bfloat16)
-        cache, logits = prefill(self.params, self.cfg, batch, s_max=self.max_len)
+        batch = {"tokens": jnp.asarray(toks), **self._stub_inputs(self.B)}
+        cache, logits = self._prefill(self.params, batch)
 
-        max_new = max(r.max_new_tokens for r in reqs)
         cur = jnp.asarray(plen - 1, jnp.int32)
         for t in range(max_new):
             self._key, k = jax.random.split(self._key)
@@ -117,10 +164,94 @@ class DecodeEngine:
                     continue
                 tok = int(arr[i])
                 r.out.append(tok)
+                if r.on_token is not None:
+                    r.on_token(r, tok)
                 if r.stop_token is not None and tok == r.stop_token:
                     r.done = True
             if all(r.done or len(r.out) >= r.max_new_tokens for r in reqs):
                 break
             cur = cur + 1
             logits, cache = self._step(self.params, cache, tokens, cur)
+        return requests
+
+    # ------------------------------------------------------------------
+    # continuous batching (ScheduleBackend protocol; driven by the
+    # ContinuousScheduler — see repro/serving/scheduler.py)
+    # ------------------------------------------------------------------
+
+    def _make_sched_step(self):
+        """Fused per-step fn: sample → mask dead slots → advance per-slot
+        positions → decode → on-device stop/budget masking.  The host sees
+        only the (tokens, alive) pair."""
+        cfg, sampler = self.cfg, self.sampler
+
+        def step(p, state, key):
+            live = state["live"]
+            toks = sample_tokens(state["logits"], sampler, key)
+            toks = jnp.where(live, toks, PAD_TOKEN)
+            index = state["index"] + live  # only live slots advance
+            logits, cache = decode_step(p, cfg, state["cache"], toks, index)
+            remaining = state["remaining"] - live
+            alive = live & (toks != state["stop"]) & (remaining > 0)
+            state = dict(cache=cache, logits=logits, index=index,
+                         remaining=remaining, stop=state["stop"], live=alive)
+            return state, toks, alive
+
+        return step
+
+    def sched_start(self) -> dict:
+        """Fresh scheduler state: empty cache, all slots dead."""
+        B, V = self.B, self.cfg.padded_vocab
+        return {
+            "cache": init_cache(self.cfg, B, self.max_len),
+            "logits": jnp.zeros((B, V), jnp.float32),
+            "live": jnp.zeros((B,), bool),
+            "index": jnp.zeros((B,), jnp.int32),
+            "remaining": jnp.zeros((B,), jnp.int32),
+            "stop": jnp.full((B,), -1, jnp.int32),
+        }
+
+    def sched_admit(self, state: dict, slot: int, request: Request) -> dict:
+        """Prefill ``request`` alone and splice it into batch row ``slot``."""
+        plen = len(request.prompt)
+        if plen < 1:
+            raise ValueError("empty prompt")
+        if not self.cfg.window and plen + request.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({plen}) + max_new_tokens ({request.max_new_tokens}) "
+                f"exceeds engine max_len {self.max_len}")
+        batch = {"tokens": jnp.asarray(np.asarray(request.prompt,
+                                                  np.int32)[None]),
+                 **self._stub_inputs(1)}
+        cache, logits1 = self._prefill_slot(self.params, state["cache"], batch,
+                                            jnp.asarray(slot, jnp.int32))
+        stop = -1 if request.stop_token is None else int(request.stop_token)
+        return dict(
+            cache=cache,
+            logits=state["logits"].at[slot].set(logits1),
+            live=state["live"].at[slot].set(True),
+            index=state["index"].at[slot].set(plen - 1),
+            remaining=state["remaining"].at[slot].set(request.max_new_tokens),
+            stop=state["stop"].at[slot].set(stop),
+        )
+
+    def sched_step(self, state: dict):
+        self._key, k = jax.random.split(self._key)
+        state, toks, alive = self._sched_step_fn(self.params, state, k)
+        return state, np.asarray(toks), np.asarray(alive)
+
+    def serve(self, requests: list[Request], *,
+              on_token: Callable[[Request, int], None] | None = None,
+              max_steps: int | None = None) -> list[Request]:
+        """Run requests through the continuous-batching scheduler: FIFO
+        admission, per-slot positions, finished slots refilled mid-flight.
+        Any number of requests — slots turn over as requests finish.
+        Returns ``requests`` (same objects, ``out`` filled, in input order).
+        """
+        from repro.serving.scheduler import ContinuousScheduler
+
+        sched = ContinuousScheduler(self, on_token=on_token)
+        for r in requests:
+            sched.submit(r)
+        sched.run(max_steps=max_steps)
         return requests

@@ -1,0 +1,166 @@
+"""Continuous-batching decode scheduler.
+
+Generational batching (``DecodeEngine.run``) admits one batch, decodes until
+the *slowest* request finishes, and only then admits more — on skewed
+workloads most slots idle while one long request drags on, and measured
+tok/s collapses (``benchmarks/serving_bench.py`` quantifies this).  The
+scheduler here keeps every slot busy instead:
+
+  * **FIFO admission queue** — ``submit()`` order is admission order;
+  * **per-slot lifecycle** — the moment a slot's request finishes (stop
+    token or token budget), the slot is refilled from the queue mid-flight
+    via :func:`repro.models.decode.prefill_into_slot`, without touching the
+    other rows or re-prefilling the batch;
+  * **streaming callbacks** — ``on_token(request, token)`` fires as each
+    token is emitted (per-request ``Request.on_token`` overrides the
+    scheduler-wide callback);
+  * **on-device stop masking** — the stop-token compare, budget countdown,
+    and liveness mask are computed inside the backend's jitted step, so the
+    decode loop never branches on the host per token; the host reads back
+    one small ``(tokens, alive)`` pair per step to drive streaming and
+    refills.
+
+The scheduler is pure host-side bookkeeping over a narrow backend protocol
+(:class:`ScheduleBackend`), implemented for real models by
+:class:`repro.serving.engine.DecodeEngine` — which lets the scheduling
+invariants be property-tested against a deterministic fake backend without
+running a model (``tests/test_serving_scheduler.py``).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Protocol, runtime_checkable
+
+from repro.serving.engine import Request
+
+__all__ = ["ContinuousScheduler", "ScheduleBackend", "SchedulerStats", "Request"]
+
+
+@runtime_checkable
+class ScheduleBackend(Protocol):
+    """What the scheduler drives.  ``state`` is opaque to the scheduler.
+
+    ``sched_step`` returns ``(state, tokens, alive)`` where ``tokens[b]`` is
+    the token just emitted by slot ``b`` and ``alive[b]`` is False once slot
+    ``b``'s request has finished (stop token hit or budget exhausted).
+    Entries for slots the scheduler holds no request in are ignored.
+    """
+
+    batch_size: int
+
+    def sched_start(self) -> Any: ...
+
+    def sched_admit(self, state: Any, slot: int, request: Request) -> Any: ...
+
+    def sched_step(self, state: Any) -> tuple[Any, Any, Any]: ...
+
+
+@dataclass
+class SchedulerStats:
+    steps: int = 0
+    admitted: int = 0
+    completed: int = 0
+    emitted_tokens: int = 0
+
+
+class ContinuousScheduler:
+    """FIFO continuous-batching scheduler over a :class:`ScheduleBackend`."""
+
+    def __init__(self, backend: ScheduleBackend,
+                 on_token: Callable[[Request, int], None] | None = None):
+        self.backend = backend
+        self.B = backend.batch_size
+        self.on_token = on_token
+        self.queue: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * self.B
+        self.completed: list[Request] = []
+        #: requests in the order they were handed to the backend (FIFO proof)
+        self.admission_order: list[Request] = []
+        self.stats = SchedulerStats()
+        self._state: Any = None
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def num_active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    @property
+    def num_queued(self) -> int:
+        return len(self.queue)
+
+    @property
+    def pending(self) -> bool:
+        return bool(self.queue) or self.num_active > 0
+
+    # -- driving ------------------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        """Enqueue a request (FIFO).  Safe to call mid-run, between steps."""
+        if request.done:
+            raise ValueError("request already completed; submit a fresh one")
+        self.queue.append(request)
+
+    def _admit_free_slots(self) -> None:
+        for slot in range(self.B):
+            if self.slots[slot] is not None:
+                continue
+            while self.queue:
+                req = self.queue.popleft()
+                if req.max_new_tokens <= 0:  # zero-budget: completes at once
+                    req.done = True
+                    self.completed.append(req)
+                    self.stats.completed += 1
+                    continue
+                self._state = self.backend.sched_admit(self._state, slot, req)
+                self.slots[slot] = req
+                self.admission_order.append(req)
+                self.stats.admitted += 1
+                break
+
+    def step(self) -> list[Request]:
+        """Admit into free slots, run one decode step, deliver tokens.
+
+        Returns the requests that finished this step (possibly empty)."""
+        if self._state is None:
+            self._state = self.backend.sched_start()
+        self._admit_free_slots()
+        if self.num_active == 0:
+            return []
+        self._state, tokens, alive = self.backend.sched_step(self._state)
+        finished: list[Request] = []
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(tokens[slot])
+            req.out.append(tok)
+            self.stats.emitted_tokens += 1
+            cb = req.on_token or self.on_token
+            if cb is not None:
+                cb(req, tok)
+            if not bool(alive[slot]):
+                req.done = True
+                self.slots[slot] = None
+                self.completed.append(req)
+                self.stats.completed += 1
+                finished.append(req)
+        self.stats.steps += 1
+        return finished
+
+    def run(self, max_steps: int | None = None) -> list[Request]:
+        """Drain: step until every submitted request completes.
+
+        Returns completed requests in completion order (``admission_order``
+        has FIFO order).  ``max_steps`` bounds runaway loops (RuntimeError).
+        """
+        steps = 0
+        while self.pending:
+            if max_steps is not None and steps >= max_steps:
+                raise RuntimeError(
+                    f"scheduler did not drain in {max_steps} steps: "
+                    f"{self.num_active} active, {self.num_queued} queued")
+            self.step()
+            steps += 1
+        return list(self.completed)

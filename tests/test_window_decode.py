@@ -33,9 +33,31 @@ def test_decode_through_wraparound():
                                     jnp.zeros((B,), jnp.int32) + (t % 17) + 1,
                                     jnp.asarray(t, jnp.int32))
         assert np.isfinite(np.asarray(logits)).all(), t
-    pos = np.sort(np.asarray(cache["pos"][0]))
-    want = np.arange(S + 14 - 8, S + 14)
-    np.testing.assert_array_equal(pos, want)
+    for b in range(B):  # pos is per-row ([n, B, CL]) since per-slot decode
+        pos = np.sort(np.asarray(cache["pos"][0, b]))
+        want = np.arange(S + 14 - 8, S + 14)
+        np.testing.assert_array_equal(pos, want)
+
+
+def test_per_slot_decode_wraps_ring_independently():
+    """With a per-slot position vector, each batch row wraps the ring on its
+    own schedule: after enough steps every row holds exactly the last
+    `window` absolute positions *of its own trajectory*."""
+    cfg = get_smoke_config("zamba2-2.7b").with_(window=8, remat=False)
+    sp = quantize_for_serving(init_params(cfg, jax.random.PRNGKey(2)), cfg)
+    B, S = 2, 6
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, size=(B, S)), jnp.int32)
+    cache, _ = prefill(sp, cfg, {"tokens": toks}, s_max=64)
+    idx = jnp.asarray([S, S + 3], jnp.int32)  # row 1 decodes 3 positions ahead
+    for t in range(12):  # ≥ window consecutive writes per row
+        logits, cache = decode_step(sp, cfg, cache,
+                                    jnp.full((B,), (t % 13) + 1, jnp.int32), idx)
+        assert np.isfinite(np.asarray(logits)).all(), t
+        idx = idx + 1
+    for b, last in enumerate(np.asarray(idx) - 1):
+        pos = np.sort(np.asarray(cache["pos"][0, b]))
+        np.testing.assert_array_equal(pos, np.arange(last - 7, last + 1))
 
 
 def test_windowed_decode_matches_windowed_forward():
