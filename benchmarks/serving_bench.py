@@ -1,5 +1,5 @@
 """Serving throughput: continuous-batching scheduler vs generational batching
-on a skewed-length workload — the case where generational batching collapses
+on a skewed workload — the case where generational batching collapses
 (every batch turns over at the pace of its slowest request, so a few long
 requests leave most slots idle most of the time).
 
@@ -9,17 +9,30 @@ run the identical packed-ternary model through the identical jitted
 decode_step — only the batching discipline differs — so the ratio isolates
 scheduling, not kernels.
 
+The workload is skewed along two axes: token budgets (many short + few long
+generations: generational idle-slot collapse) and prompt lengths (every
+``--long-prompt-every``-th request carries a ``--long-prompt-len`` prompt:
+admission latency).  Besides tok/s, the bench records per-request
+**time-to-first-token** — continuous admission is chunked (fixed-size
+prefill chunks, one compiled trace) and budgeted (``--admission-budget``
+chunks per scheduler step), so co-batched requests keep decoding while a
+long prompt is admitted and their TTFT stays bounded.
+
 Writes ``BENCH_serving.json`` (schema below) for CI to surface in PRs:
 
-  {"schema_version": 1, "arch": ..., "batch": ..., "workload": {...},
-   "generational": {"tokens": N, "seconds": s, "tok_s": r, "decode_steps": d},
+  {"schema_version": 2, "arch": ..., "batch": ..., "workload": {...},
+   "prefill_chunk": C, "admission_budget": k,
+   "generational": {"tokens": N, "seconds": s, "tok_s": r, "decode_steps": d,
+                    "ttft_s": {"mean": m, "p50": p, "max": M}},
    "continuous":   {... same keys ...},
-   "speedup": continuous.tok_s / generational.tok_s}
+   "speedup": continuous.tok_s / generational.tok_s,
+   "ttft_ratio": continuous.ttft_s.max / generational.ttft_s.max}
 
 Run:  PYTHONPATH=src python benchmarks/serving_bench.py --smoke
       (CPU-friendly reduced config; full mode uses the registry smoke config
-      unreduced).  Prompts share one length so each path compiles exactly one
-      prefill + one decode step; compile time is excluded via a warmup pass.
+      unreduced).  Compile time is excluded via a warmup pass; the chunked
+      admission path compiles one trace per chunk size regardless of the
+      prompt-length mix.
 """
 
 from __future__ import annotations
@@ -39,13 +52,18 @@ from repro.serving.scheduler import ContinuousScheduler
 
 
 def make_requests(n: int, short_new: int, long_new: int, long_every: int,
-                  prompt_len: int, vocab: int) -> list[Request]:
-    """Many short + few long (every ``long_every``-th request), fixed prompt
-    length (one compile), varied prompt contents."""
+                  prompt_len: int, long_prompt_len: int,
+                  long_prompt_every: int, vocab: int) -> list[Request]:
+    """Doubly skewed workload: every ``long_every``-th request generates
+    ``long_new`` tokens (vs ``short_new``), and every
+    ``long_prompt_every``-th request carries a ``long_prompt_len`` prompt
+    (vs ``prompt_len``) — the admission-latency case."""
     reqs = []
     for i in range(n):
         new = long_new if i % long_every == long_every - 1 else short_new
-        prompt = [2 + ((7 * i + j) % (vocab - 3)) for j in range(prompt_len)]
+        plen = long_prompt_len if i % long_prompt_every == long_prompt_every - 1 \
+            else prompt_len
+        prompt = [2 + ((7 * i + j) % (vocab - 3)) for j in range(plen)]
         reqs.append(Request(prompt=prompt, max_new_tokens=new))
     return reqs
 
@@ -60,8 +78,9 @@ def run_generational(engine: DecodeEngine, reqs: list[Request]) -> int:
     return steps
 
 
-def run_continuous(engine: DecodeEngine, reqs: list[Request]) -> int:
-    sched = ContinuousScheduler(engine)
+def run_continuous(engine: DecodeEngine, reqs: list[Request],
+                   admission_budget: int | None = None) -> int:
+    sched = ContinuousScheduler(engine, admission_budget=admission_budget)
     for r in reqs:
         sched.submit(r)
     sched.run(max_steps=100_000)
@@ -69,15 +88,27 @@ def run_continuous(engine: DecodeEngine, reqs: list[Request]) -> int:
 
 
 def bench(path_fn, engine, mk_reqs) -> dict:
-    path_fn(engine, mk_reqs())  # warmup: compile prefill + decode step
+    path_fn(engine, mk_reqs())  # warmup: compile prefill chunks + decode step
     reqs = mk_reqs()
+    first_tok: dict[int, float] = {}
+
+    def stamp(req, tok):
+        first_tok.setdefault(id(req), time.perf_counter())
+
+    for r in reqs:
+        r.on_token = stamp
     t0 = time.perf_counter()
     steps = path_fn(engine, reqs)
     dt = time.perf_counter() - t0
     tokens = sum(len(r.out) for r in reqs)
     assert all(r.done or len(r.out) == r.max_new_tokens for r in reqs)
+    ttft = sorted(first_tok[id(r)] - t0 for r in reqs if id(r) in first_tok)
+    assert len(ttft) == len(reqs), "a request never emitted a first token"
     return {"tokens": tokens, "seconds": round(dt, 4),
-            "tok_s": round(tokens / dt, 2), "decode_steps": steps}
+            "tok_s": round(tokens / dt, 2), "decode_steps": steps,
+            "ttft_s": {"mean": round(sum(ttft) / len(ttft), 4),
+                       "p50": round(ttft[len(ttft) // 2], 4),
+                       "max": round(ttft[-1], 4)}}
 
 
 def main():
@@ -90,8 +121,18 @@ def main():
     ap.add_argument("--short-new", type=int, default=2)
     ap.add_argument("--long-new", type=int, default=32)
     ap.add_argument("--long-every", type=int, default=4,
-                    help="every k-th request is long (skew knob)")
+                    help="every k-th request is long (generation-skew knob)")
     ap.add_argument("--prompt-len", type=int, default=3)
+    ap.add_argument("--long-prompt-len", type=int, default=48,
+                    help="prompt length of the long-prompt requests "
+                    "(admission-skew knob)")
+    ap.add_argument("--long-prompt-every", type=int, default=5,
+                    help="every k-th request has a long prompt")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="admission prefill chunk size (bucket granularity)")
+    ap.add_argument("--admission-budget", type=int, default=1,
+                    help="prefill chunks per scheduler step for the "
+                    "continuous path (0 = unbounded)")
     ap.add_argument("--policy", default="auto",
                     help="ternary-matmul dispatch policy for both paths")
     ap.add_argument("--out", default="BENCH_serving.json")
@@ -101,35 +142,55 @@ def main():
     if args.smoke:
         cfg = cfg.with_(n_layers=2, d_model=128, n_heads=2, n_kv_heads=2,
                         head_dim=64, d_ff=256, vocab_size=512, loss_chunk=64)
-    max_len = args.prompt_len + args.long_new + 1
+    max_prompt = max(args.prompt_len, args.long_prompt_len)
+    max_len = max_prompt + args.long_new + 1
+    budget = args.admission_budget if args.admission_budget > 0 else None
     params = init_params(cfg, jax.random.PRNGKey(0))
     served = quantize_for_serving(params, cfg)
 
     def mk_reqs():
         return make_requests(args.requests, args.short_new, args.long_new,
-                             args.long_every, args.prompt_len, cfg.vocab_size)
+                             args.long_every, args.prompt_len,
+                             args.long_prompt_len, args.long_prompt_every,
+                             cfg.vocab_size)
 
-    results = {"schema_version": 1, "arch": cfg.name, "batch": args.batch,
+    results = {"schema_version": 2, "arch": cfg.name, "batch": args.batch,
                "policy": args.policy, "smoke": bool(args.smoke),
+               "prefill_chunk": args.prefill_chunk,
+               "admission_budget": args.admission_budget,
                "workload": {"requests": args.requests,
                             "short_new": args.short_new,
                             "long_new": args.long_new,
                             "long_every": args.long_every,
-                            "prompt_len": args.prompt_len}}
-    for name, fn in [("generational", run_generational),
-                     ("continuous", run_continuous)]:
+                            "prompt_len": args.prompt_len,
+                            "long_prompt_len": args.long_prompt_len,
+                            "long_prompt_every": args.long_prompt_every}}
+    paths = [("generational", run_generational),
+             ("continuous",
+              lambda e, r: run_continuous(e, r, admission_budget=budget))]
+    for name, fn in paths:
         # fresh engine per path: identical PRNG/jit state, no cross-warming
         engine = DecodeEngine(served, cfg, batch_size=args.batch,
-                              max_len=max_len, matmul_policy=args.policy)
+                              max_len=max_len, matmul_policy=args.policy,
+                              prefill_chunk=args.prefill_chunk)
+        # record the EFFECTIVE chunk (the engine clamps to the ring length
+        # on windowed configs), not the requested flag
+        results["prefill_chunk"] = engine.prefill_chunk
         results[name] = bench(fn, engine, mk_reqs)
-        print(f"[serving_bench] {name:>12}: {results[name]['tokens']} tok in "
-              f"{results[name]['seconds']:.2f}s = {results[name]['tok_s']:.1f} "
-              f"tok/s ({results[name]['decode_steps']} decode steps)")
+        r = results[name]
+        print(f"[serving_bench] {name:>12}: {r['tokens']} tok in "
+              f"{r['seconds']:.2f}s = {r['tok_s']:.1f} tok/s "
+              f"({r['decode_steps']} decode steps, ttft mean/max "
+              f"{r['ttft_s']['mean']:.3f}/{r['ttft_s']['max']:.3f}s)")
 
     results["speedup"] = round(
         results["continuous"]["tok_s"] / results["generational"]["tok_s"], 3)
+    results["ttft_ratio"] = round(
+        results["continuous"]["ttft_s"]["max"]
+        / max(results["generational"]["ttft_s"]["max"], 1e-9), 3)
     print(f"[serving_bench] continuous / generational speedup: "
-          f"{results['speedup']:.2f}x")
+          f"{results['speedup']:.2f}x; worst-case ttft ratio: "
+          f"{results['ttft_ratio']:.2f}")
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)
         f.write("\n")

@@ -8,7 +8,15 @@ container it exercises the identical code path on local devices.
 Usage:
   python -m repro.launch.serve --arch bitnet-b1.58-2b --smoke \
       [--ckpt-dir DIR] [--batch 4] [--new-tokens 32] [--temperature 0.8] \
-      [--discipline continuous|generational] [--stream]
+      [--discipline continuous|generational] [--stream] \
+      [--prefill-chunk 32] [--admission-budget 1]
+
+Admission is chunked and length-bucketed on supported architectures:
+prompts are padded to a multiple of ``--prefill-chunk`` and prefilled one
+fixed-shape chunk at a time (one compiled trace for any prompt-length mix);
+``--admission-budget`` caps prefill chunks per scheduler step so co-batched
+requests keep decoding — bounded time-to-first-token — while a long prompt
+is admitted.
 """
 
 from __future__ import annotations
@@ -39,6 +47,13 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="admission prefill chunk size / bucket granularity "
+                    "(clamped to the ring on windowed configs)")
+    ap.add_argument("--admission-budget", type=int, default=0,
+                    help="max prefill chunks per scheduler step (0 = "
+                    "unbounded); >0 bounds co-batched time-to-first-token "
+                    "while long prompts are admitted (continuous only)")
     ap.add_argument("--discipline", choices=["continuous", "generational"],
                     default="continuous")
     ap.add_argument("--stream", action="store_true",
@@ -60,7 +75,8 @@ def main():
     engine = DecodeEngine(served, cfg, batch_size=args.batch,
                           max_len=args.max_len,
                           sampler=SamplerConfig(temperature=args.temperature,
-                                                top_k=args.top_k))
+                                                top_k=args.top_k),
+                          prefill_chunk=args.prefill_chunk)
     n_req = args.requests if args.requests is not None else args.batch
     reqs = [Request(prompt=[7 + i, 13 + i], max_new_tokens=args.new_tokens)
             for i in range(n_req)]
@@ -76,7 +92,9 @@ def main():
         ids = {id(r): i for i, r in enumerate(reqs)}
         on_token = (lambda r, t: print(f"  [stream] req {ids[id(r)]}: {t}")) \
             if args.stream else None
-        sched = ContinuousScheduler(engine, on_token=on_token)
+        budget = args.admission_budget if args.admission_budget > 0 else None
+        sched = ContinuousScheduler(engine, on_token=on_token,
+                                    admission_budget=budget)
         for r in reqs:
             sched.submit(r)
         sched.run()

@@ -9,12 +9,18 @@ decode win that motivates the whole accelerator line (§I).
 
 Caches use a ring buffer when the config has a sliding ``window`` (zamba2's
 shared attention at 500k context), with absolute-position slots so RoPE'd
-keys stay valid after wraparound.
+keys stay valid after wraparound.  Every writer honours one canonical ring
+invariant — **position ``p`` lives at slot ``p % CL``** (:func:`_ring_slot`)
+— so whole-prompt prefill, chunked prefill, and decode writes all agree on
+where a key belongs and wraparound never evicts an in-window key early.
 
 Decode is continuous-batching ready: ``decode_step`` takes a per-slot
-position vector ``index: [B]`` (each row masks/advances independently) and
-``prefill_into_slot`` splices a single freshly-prefilled request into one
-batch row of a live cache — see :mod:`repro.serving.scheduler`.
+position vector ``index: [B]`` (each row masks/advances independently;
+``-1`` marks a dead row whose KV write must drop), ``prefill_into_slot``
+splices a single freshly-prefilled request into one batch row of a live
+cache, and :func:`prefill_chunk` advances a prefill by one fixed-size
+chunk — the length-bucketed admission path (prompts padded to chunk
+multiples compile one trace total) — see :mod:`repro.serving.scheduler`.
 """
 
 from __future__ import annotations
@@ -206,11 +212,14 @@ def init_cache(cfg: ModelConfig, B: int, s_max: int, dtype=jnp.bfloat16) -> dict
     raise ValueError(cfg.block_pattern)
 
 
-def _ring_slot(cfg: ModelConfig, s_max: int, index: jax.Array) -> jax.Array:
-    CL = cache_len(cfg, s_max)
-    return index % CL if cfg.window else index
-
-
+def _ring_slot(cfg: ModelConfig, CL: int, index: jax.Array) -> jax.Array:
+    """Canonical ring-slot invariant: position ``p`` lives at slot ``p % CL``
+    when a sliding window makes the cache a ring; full caches store at the
+    position itself.  Negative positions (dead scheduler rows, padded chunk
+    tails) map one past the cache end so the scatter write drops."""
+    index = jnp.asarray(index, jnp.int32)
+    slot = index % CL if (cfg.window and CL) else index
+    return jnp.where(index >= 0, slot, CL)
 
 
 # ---------------------------------------------------------------------------
@@ -219,19 +228,31 @@ def _ring_slot(cfg: ModelConfig, s_max: int, index: jax.Array) -> jax.Array:
 
 
 def _pad_kv_to(k: jax.Array, CL: int):
-    """[L?, B, S, H, hd] → padded/truncated to CL slots (keep the last CL)."""
+    """[L?, B, S, H, hd] → CL slots honouring the ring invariant.
+
+    ``S < CL`` pads (position p sits at slot p); ``S >= CL`` keeps the last
+    CL keys and rolls them so position ``p`` lands at slot ``p % CL`` — the
+    slot ``decode_step`` will overwrite when it writes position ``p + CL``.
+    Without the roll the window's oldest key would sit at slot 0 instead of
+    ``(S - CL) % CL`` and the first post-prefill decode steps would evict
+    *in-window* keys (one attended key silently lost per step until the ring
+    is fully rewritten)."""
     S = k.shape[-3]
     if S >= CL:
-        return k[..., S - CL:, :, :]
+        k = k[..., S - CL:, :, :]
+        shift = S % CL
+        return jnp.roll(k, shift, axis=-3) if shift else k
     pad = [(0, 0)] * k.ndim
     pad[-3] = (0, CL - S)
     return jnp.pad(k, pad)
 
 
 def _prefill_positions(S: int, CL: int):
+    """Per-slot absolute positions matching :func:`_pad_kv_to`'s layout:
+    slot ``s`` holds position ``p`` ⇒ ``p % CL == s`` (-1 = empty)."""
     pos = jnp.arange(S, dtype=jnp.int32)
     if S >= CL:
-        return pos[S - CL:]
+        return jnp.roll(pos[S - CL:], S % CL)
     return jnp.concatenate([pos, jnp.full((CL - S,), -1, jnp.int32)])
 
 
@@ -244,6 +265,13 @@ def prefill(p: Params, cfg: ModelConfig, batch: dict, s_max: int):
     tokens = batch["tokens"]
     B, S = tokens.shape
     CL = cache_len(cfg, s_max)
+    if not cfg.window and S > CL:
+        # a full-attention cache cannot hold the prompt; truncating to the
+        # last s_max keys would silently change what decode attends to
+        raise ValueError(
+            f"prompt length {S} exceeds cache length {CL} (s_max) for a "
+            f"non-windowed config; raise s_max/max_len instead of relying on "
+            f"silent truncation")
     cache = init_cache(cfg, B, CL if cfg.window else s_max, dtype=jnp.bfloat16)
     positions = jnp.arange(S)
     from repro.models.layers import mask_padded_vocab
@@ -381,9 +409,12 @@ def prefill(p: Params, cfg: ModelConfig, batch: dict, s_max: int):
 def prefill_into_slot(p: Params, cfg: ModelConfig, cache: dict, batch: dict,
                       slot: jax.Array, s_max: int):
     """Prefill ONE request and splice its KV/state rows into batch row
-    ``slot`` of a live multi-slot ``cache`` — the continuous-batching refill
-    path: a finished slot is re-armed mid-flight without touching (or
-    re-prefilling) any other row.
+    ``slot`` of a live multi-slot ``cache`` — the atomic reference form of
+    the continuous-batching refill: a finished slot is re-armed mid-flight
+    without touching (or re-prefilling) any other row.  (The serving engine
+    performs the same prefill+splice through its jitted admission commit so
+    chunked and whole-prompt admission share one splice; this function is
+    the standalone API.)
 
     ``batch["tokens"]`` must have leading batch dim 1; ``slot`` is a (possibly
     traced) int32 row index.  Every cache leaf carries the batch on axis 1
@@ -402,6 +433,127 @@ def prefill_into_slot(p: Params, cfg: ModelConfig, cache: dict, batch: dict,
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill (length-bucketed admission)
+# ---------------------------------------------------------------------------
+
+
+def supports_chunked_prefill(p: Params, cfg: ModelConfig) -> bool:
+    """Whether :func:`prefill_chunk` covers this (params, config).
+
+    The chunk-scan path needs a uniform stack of attention blocks whose only
+    cross-chunk state is the KV ring: plain ``attn`` stacks (incl. uniform
+    MoE) qualify; encoder-decoder, modality frontends, interleaved-MoE
+    (``dense_blocks``), and recurrent-state families (zamba2/xlstm, whose
+    conv/SSM states would absorb chunk padding) fall back to whole-prompt
+    prefill."""
+    return (cfg.block_pattern == "attn" and not cfg.is_encdec
+            and cfg.frontend == "none" and "dense_blocks" not in p)
+
+
+def prefill_chunk(p: Params, cfg: ModelConfig, cache: dict,
+                  tokens: jax.Array, positions: jax.Array,
+                  take: jax.Array | int | None = None):
+    """Advance a prefill by ONE fixed-size chunk of the prompt.
+
+    The admission path of continuous batching: instead of tracing one whole-
+    prompt prefill per prompt length, the engine pads prompts to a multiple
+    of the chunk size and scans them through this function — every chunk has
+    the same shape, so a mixed-length request stream compiles exactly one
+    trace.  Each chunk attends the already-written ring (read-only) plus
+    itself via :func:`repro.models.layers.append_attention` and then writes
+    its KV at the canonical ring slots (``p % CL`` — the same invariant
+    whole-prompt prefill and decode honour), so chunked and whole-prompt
+    prefill produce the same cache.
+
+    tokens: [B, C]; positions: int32 [B, C] absolute prompt positions, -1 on
+    the padded tail (padded tokens neither write KV nor match any query);
+    ``take``: index into the chunk of the token whose logits to return
+    (default C-1; pass the last *valid* index for a padded final chunk).
+    Returns (cache, logits [B, V]).
+    """
+    if not supports_chunked_prefill(p, cfg):
+        raise NotImplementedError(
+            f"chunked prefill not supported for {cfg.name} "
+            f"(block_pattern={cfg.block_pattern}); use prefill()")
+    from repro.models.layers import append_attention, mask_padded_vocab
+
+    B, C = tokens.shape
+    CL = cache["pos"].shape[-1]
+    if cfg.window and C > CL:
+        raise ValueError(
+            f"chunk size {C} exceeds ring length {CL}: a single chunk would "
+            f"collide with itself in the ring; use chunks <= the window")
+    positions = jnp.asarray(positions, jnp.int32)
+    slot = _ring_slot(cfg, CL, positions)  # [B, C]; padded tail drops
+    rows = jnp.arange(B)
+    take = C - 1 if take is None else take
+    h = embed_tokens(p, cfg, tokens)
+    old_pos = cache["pos"][0]  # [B, CL] pre-chunk positions (-1 = empty)
+
+    def body(x, xs):
+        blk, ck, cv = xs
+        hn = rms_norm(blk["ln1"], x, offset=cfg.rmsnorm_offset)
+        a, (k, v) = append_attention(blk["attn"], hn, cfg, positions=positions,
+                                     cache_k=ck, cache_v=cv,
+                                     k_positions=old_pos, window=cfg.window)
+        x = x + a
+        hn = rms_norm(blk["ln2"], x, offset=cfg.rmsnorm_offset)
+        if cfg.n_experts:
+            f, _ = moe_ffn(blk["moe"], hn, cfg)
+        else:
+            f = ffn(blk["ffn"], hn, cfg)
+        return x + f, (k, v)
+
+    h, (k_new, v_new) = jax.lax.scan(body, h, (p["blocks"], cache["k"],
+                                               cache["v"]))
+    # one batched scatter per leaf: all layers' chunk tokens at their
+    # canonical slots (padded positions target slot CL and drop)
+    ks = cache["k"].at[:, rows[:, None], slot].set(k_new.astype(cache["k"].dtype))
+    vs = cache["v"].at[:, rows[:, None], slot].set(v_new.astype(cache["v"].dtype))
+    new_pos = cache["pos"].at[:, rows[:, None], slot].set(positions)
+    cache = dict(cache, k=ks, v=vs, pos=new_pos)
+    h = rms_norm(p["final_norm"], h, offset=cfg.rmsnorm_offset)
+    logits = (h[:, take] @ lm_head_w(p, cfg)).astype(jnp.float32)
+    return cache, mask_padded_vocab(logits, cfg.vocab_size)
+
+
+def prefill_chunks_of(plen: int, chunk: int) -> list[tuple[int, int]]:
+    """Split a prompt of length ``plen`` into ``(start, valid)`` chunk specs
+    (every chunk spans ``chunk`` tokens; the last may have ``valid < chunk``
+    padded tail positions)."""
+    if plen < 1:
+        raise ValueError("empty prompt")
+    return [(s, min(chunk, plen - s)) for s in range(0, plen, chunk)]
+
+
+def prefill_chunked(p: Params, cfg: ModelConfig, batch: dict, s_max: int,
+                    chunk: int):
+    """Whole-prompt prefill built from :func:`prefill_chunk` scans — the
+    differential-oracle form: must produce the same cache and last-position
+    logits as :func:`prefill` (windowed or not, including prompts that wrap
+    the ring), while compiling one trace per chunk size instead of one per
+    prompt length.  Returns (cache, logits [B, V])."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    CL = cache_len(cfg, s_max)
+    if not cfg.window and S > CL:
+        raise ValueError(
+            f"prompt length {S} exceeds cache length {CL} (s_max) for a "
+            f"non-windowed config")
+    cache = init_cache(cfg, B, CL if cfg.window else s_max, dtype=jnp.bfloat16)
+    logits = None
+    for start, valid in prefill_chunks_of(S, chunk):
+        ctoks = jnp.pad(tokens[:, start:start + valid],
+                        ((0, 0), (0, chunk - valid)), constant_values=1)
+        cpos = jnp.where(jnp.arange(chunk) < valid,
+                         start + jnp.arange(chunk), -1)
+        cpos = jnp.broadcast_to(cpos, (B, chunk)).astype(jnp.int32)
+        cache, logits = prefill_chunk(p, cfg, cache, ctoks, cpos,
+                                      take=valid - 1)
+    return cache, logits
+
+
+# ---------------------------------------------------------------------------
 # decode
 # ---------------------------------------------------------------------------
 
@@ -415,16 +567,17 @@ def decode_step(p: Params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
     from its own ``index[b]``, so a continuous-batching scheduler can refill
     finished rows mid-flight (see :func:`prefill_into_slot`).
 
-    Rows whose position is out of cache range scatter-drop their KV write
-    (dead slots held by a scheduler are harmless).  Returns
-    (logits [B, V], new_cache).
+    Rows whose position is out of cache range — or negative (``index[b] =
+    -1``, the scheduler's dead/prefilling-row sentinel) — scatter-drop their
+    KV and position writes, so idle slots can never pollute the ring.
+    Returns (logits [B, V], new_cache).
     """
     B = tokens.shape[0]
     index = jnp.asarray(index, jnp.int32)
     if index.ndim == 0:
         index = jnp.broadcast_to(index, (B,))
     CL = cache["pos"].shape[-1] if "pos" in cache else 0
-    slot = (index % CL) if (cfg.window and CL) else index  # [B]
+    slot = _ring_slot(cfg, CL, index)  # [B]; canonical p % CL ring slots
     positions = index[:, None]  # [B, 1] per-row query positions
     rows = jnp.arange(B)
     h = embed_tokens(p, cfg, tokens[:, None])
@@ -498,33 +651,23 @@ def decode_step(p: Params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
         else:
             # Read-only cache in the layer loop: attend over the OLD cache
             # and merge the just-computed token as one extra online-softmax
-            # chunk; new k/v come out as tiny scan ys and are written with a
+            # chunk (layers.append_attention — shared with chunked prefill);
+            # new k/v come out as tiny scan ys and are written with a
             # single batched DUS after the loop.  Mutating the carried cache
             # inside the loop makes XLA insert full-cache copies (+f32
             # mirrors on backends that upcast bf16 dots) — measured 17
             # GB/layer on gemma-7b decode_32k (EXPERIMENTS.md §Perf it.3).
-            from repro.models.layers import _sdpa, linear as _lin, rope as _rope
+            from repro.models.layers import append_attention
             old_pos = cache["pos"][0]  # [B, CL] pre-update positions (-1 = empty)
 
             def body(x, xs):
                 blk, ck, cv = xs
-                B = x.shape[0]
                 hn = rms_norm(blk["ln1"], x, offset=cfg.rmsnorm_offset)
-                q = _lin(blk["attn"]["wq"], hn, cfg).reshape(B, 1, cfg.n_heads,
-                                                             cfg.head_dim)
-                k = _lin(blk["attn"]["wk"], hn, cfg).reshape(B, 1, cfg.n_kv_heads,
-                                                             cfg.head_dim)
-                v = _lin(blk["attn"]["wv"], hn, cfg).reshape(B, 1, cfg.n_kv_heads,
-                                                             cfg.head_dim)
-                if cfg.qk_norm:
-                    q = rms_norm(blk["attn"]["q_norm"], q)
-                    k = rms_norm(blk["attn"]["k_norm"], k)
-                q = _rope(q, positions, cfg.rope_theta)
-                k = _rope(k, positions, cfg.rope_theta)
-                o = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), cfg,
-                          q_pos=positions, k_pos=old_pos, window=cfg.window,
-                          extra_kv=(k, v, positions))
-                x = x + _lin(blk["attn"]["wo"], o, cfg)
+                a, (k, v) = append_attention(blk["attn"], hn, cfg,
+                                             positions=positions, cache_k=ck,
+                                             cache_v=cv, k_positions=old_pos,
+                                             window=cfg.window)
+                x = x + a
                 hn = rms_norm(blk["ln2"], x, offset=cfg.rmsnorm_offset)
                 if cfg.n_experts:
                     f, _ = moe_ffn(blk["moe"], hn, cfg)

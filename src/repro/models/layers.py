@@ -222,6 +222,46 @@ def _sdpa(q, k, v, cfg: ModelConfig, *, q_pos, k_pos, kind: str = "causal",
     return out[:, :Sq].reshape(B, Sq, H * hd).astype(v.dtype)
 
 
+def append_attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                     positions: jax.Array, cache_k: jax.Array,
+                     cache_v: jax.Array, k_positions: jax.Array,
+                     window: int = 0):
+    """Attention over a READ-ONLY kv cache plus the tokens being appended.
+
+    The decode/chunked-prefill form: q/k/v come from ``x`` (``Sq`` = 1 for
+    single-token decode, = chunk size for chunked prefill), the cache is
+    attended as-is with the new tokens merged as one extra online-softmax
+    chunk, and the fresh ``(k, v)`` are returned for the caller to write at
+    their ring slots *after* the layer loop.  Keeping the cache read-only
+    inside the layer scan stops XLA inserting full-cache copies per layer
+    (see the note in ``decode_step``).  Causality inside the appended chunk
+    falls out of the absolute-position mask (``k_pos <= q_pos``), so one code
+    path serves both uses.
+
+    x: [B, Sq, D]; positions: [B, Sq] absolute; cache k/v: [B, CL, Hkv, hd];
+    k_positions: [B, CL] slot positions (-1 = empty).  A ``-1`` query
+    position matches no key, but its *output row is garbage* (a fully-masked
+    online softmax degenerates to a uniform average over the scanned values)
+    — callers must discard those rows (padded chunk tails are skipped by the
+    logits ``take`` index; dead decode rows are masked by the scheduler) and
+    its k/v must not be written back (its ring slot maps out of range).
+    Returns (out [B, Sq, D], (k, v) [B, Sq, Hkv, hd]).
+    """
+    B, Sq, _ = x.shape
+    q = linear(p["wq"], x, cfg).reshape(B, Sq, cfg.n_heads, cfg.head_dim)
+    k = linear(p["wk"], x, cfg).reshape(B, Sq, cfg.n_kv_heads, cfg.head_dim)
+    v = linear(p["wv"], x, cfg).reshape(B, Sq, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q)
+        k = rms_norm(p["k_norm"], k)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    o = _sdpa(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype), cfg,
+              q_pos=positions, k_pos=k_positions, window=window,
+              extra_kv=(k, v, positions))
+    return linear(p["wo"], o, cfg), (k, v)
+
+
 def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
               positions: jax.Array, k_positions: jax.Array | None = None,
               kind: str = "causal", window: int = 0,

@@ -18,6 +18,7 @@ The engine adds the serving substrate around the model's decode_step:
 
 from __future__ import annotations
 
+from collections import Counter
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -26,7 +27,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.models.decode import decode_step, init_cache, prefill, prefill_into_slot
+from repro.models.decode import (
+    cache_len,
+    decode_step,
+    init_cache,
+    prefill,
+    prefill_chunk as model_prefill_chunk,  # `prefill_chunk` is an engine kwarg
+    prefill_chunks_of,
+    supports_chunked_prefill,
+)
 
 
 @dataclass
@@ -66,11 +75,18 @@ PAD_TOKEN = 1
 class DecodeEngine:
     def __init__(self, params, cfg: ModelConfig, *, batch_size: int,
                  max_len: int, sampler: SamplerConfig | None = None,
-                 matmul_policy: str | None = None):
+                 matmul_policy: str | None = None, prefill_chunk: int = 32):
         """``matmul_policy`` overrides ``cfg.matmul_policy`` for every ternary
         projection this engine executes ("auto" | "prior" | "fixed:<kernel>",
         see :mod:`repro.kernels.dispatch`).  Kernel selection happens once,
-        at trace time of the jitted prefill/decode step."""
+        at trace time of the jitted prefill/decode step.
+
+        ``prefill_chunk`` sets the admission chunk size: prompts are padded
+        to a multiple of it and scanned chunk-by-chunk through one compiled
+        trace (clamped to the ring length on windowed configs so a chunk
+        never collides with itself).  Architectures without chunked-prefill
+        support fall back to whole-prompt admission, which retraces per
+        prompt length."""
         if matmul_policy is not None:
             cfg = cfg.with_(matmul_policy=matmul_policy)
         self.params = params
@@ -79,37 +95,84 @@ class DecodeEngine:
         self.batch_size = batch_size  # ScheduleBackend protocol name
         self.max_len = max_len
         self.sampler = sampler or SamplerConfig()
+        self.prefill_chunk = max(1, min(prefill_chunk,
+                                        cache_len(cfg, max_len)))
+        self.chunked_admission = supports_chunked_prefill(params, cfg)
+        #: jit traces per compiled entry point — the bucketed-admission
+        #: guarantee is observable here: a mixed-length request stream keeps
+        #: ``trace_counts["prefill_chunk"] == 1`` (one bucket shape)
+        self.trace_counts: Counter[str] = Counter()
         # cache buffers are donated on every decode path (callers always
         # rebind the returned cache) so XLA updates KV in place
         self._step = jax.jit(
-            lambda p, c, t, i: decode_step(p, cfg, c, t, i),
+            self._counted("decode_step",
+                          lambda p, c, t, i: decode_step(p, cfg, c, t, i)),
             donate_argnums=(1,))
         self._prefill = jax.jit(
-            lambda p, b: prefill(p, cfg, b, s_max=self.max_len))
-        # continuous-batching paths: refill one slot (retraces per prompt
-        # length) and the fused sample→mask→decode step.  The live cache /
-        # state is donated — callers always replace it with the returned
-        # value — so XLA updates the KV buffers in place instead of copying
-        # the whole cache every token (same convention as launch.dryrun).
-        self._prefill_slot = jax.jit(
-            lambda p, c, b, s: prefill_into_slot(p, cfg, c, b, s,
-                                                 s_max=self.max_len),
+            self._counted("prefill",
+                          lambda p, b: prefill(p, cfg, b, s_max=self.max_len)))
+        # continuous-batching paths: the fixed-shape prefill chunk +
+        # admission commit (bucketed path: one trace each; the whole-prompt
+        # fallback reuses `_prefill` at B=1 — retraces per prompt length —
+        # and the same commit), and the fused sample→mask→decode step.  The
+        # live cache / state is donated — callers always replace it with the
+        # returned value — so XLA updates the KV buffers in place instead of
+        # copying the whole cache every token (same convention as
+        # launch.dryrun).
+        self._prefill_chunk_fn = jax.jit(
+            self._counted("prefill_chunk",
+                          lambda p, c, t, pos, take: model_prefill_chunk(
+                              p, cfg, c, t, pos, take)),
             donate_argnums=(1,))
-        self._sched_step_fn = jax.jit(self._make_sched_step(),
-                                      donate_argnums=(1,))
+        # donate only the big state: the single-row chunk cache cannot alias
+        # any [B, ...] output buffer, so donating it would just warn
+        self._admit_commit_fn = jax.jit(
+            self._counted("admit_commit", self._admit_commit),
+            donate_argnums=(0,))
+        self._sched_step_fn = jax.jit(
+            self._counted("sched_step", self._make_sched_step()),
+            donate_argnums=(1,))
         self._key = jax.random.PRNGKey(self.sampler.seed)
 
-    def autotune_shapes(self, **autotune_kw) -> dict:
-        """Populate the dispatch autotune cache for this engine's per-step
-        matmul shapes (see :func:`repro.models.decode.layer_matmul_shapes`);
-        call before the first `run` so ``policy="auto"`` dispatches on
-        measurements instead of the analytical prior."""
-        from repro.kernels.dispatch import autotune, get_autotune_cache
+    def _counted(self, name: str, fn):
+        """Wrap a to-be-jitted callable so each (re)trace bumps
+        ``trace_counts[name]`` — cache hits never re-enter the wrapper."""
+        def wrapped(*args):
+            self.trace_counts[name] += 1
+            return fn(*args)
+        return wrapped
+
+    def matmul_shape_universe(self, *, include_prefill: bool = True
+                              ) -> list[tuple[int, int, int]]:
+        """Every ternary-matmul ``(M, K, N)`` this engine's steady-state
+        serving paths dispatch: decode (``M = B``) plus, with
+        ``include_prefill``, the admission-chunk bucket shape (``M = 1 ·
+        chunk`` — requests are prefilled one at a time, chunk by chunk).
+        Generational ``run()`` prefills at ``M = B · prompt_len`` for
+        whatever prompt lengths arrive; those are workload-dependent and
+        belong to ``benchmarks/autotune_sweep.py``, not the engine's fixed
+        universe."""
         from repro.models.decode import layer_matmul_shapes
+
+        shapes = set(layer_matmul_shapes(self.cfg, self.B))
+        if include_prefill:
+            shapes |= set(layer_matmul_shapes(self.cfg, 1,
+                                              seq_len=self.prefill_chunk))
+        return sorted(shapes)
+
+    def autotune_shapes(self, *, include_prefill: bool = True,
+                        **autotune_kw) -> dict:
+        """Populate the dispatch autotune cache for this engine's per-step
+        matmul shapes — decode *and* (by default) the prefill bucket shapes,
+        so ``policy="auto"`` admission dispatches on measurements instead of
+        always falling back to the analytical prior.  Call before the first
+        `run`/`serve`."""
+        from repro.kernels.dispatch import autotune, get_autotune_cache
 
         cache = get_autotune_cache()
         results = {}
-        for (m, k, n) in layer_matmul_shapes(self.cfg, self.B):
+        for (m, k, n) in self.matmul_shape_universe(
+                include_prefill=include_prefill):
             results[(m, k, n)] = autotune(m, k, n, self.cfg.dtype,
                                           mu=self.cfg.mu, cache=cache,
                                           save=False, **autotune_kw)
@@ -190,7 +253,11 @@ class DecodeEngine:
             toks = sample_tokens(state["logits"], sampler, key)
             toks = jnp.where(live, toks, PAD_TOKEN)
             index = state["index"] + live  # only live slots advance
-            logits, cache = decode_step(p, cfg, state["cache"], toks, index)
+            # dead rows decode at the -1 sentinel: their KV/pos writes drop,
+            # so a slot mid-chunked-prefill (or simply idle) never pollutes
+            # the ring while decode steps interleave with admission chunks
+            logits, cache = decode_step(p, cfg, state["cache"], toks,
+                                        jnp.where(live, index, -1))
             remaining = state["remaining"] - live
             alive = live & (toks != state["stop"]) & (remaining > 0)
             state = dict(cache=cache, logits=logits, index=index,
@@ -211,8 +278,7 @@ class DecodeEngine:
             "stop": jnp.full((B,), -1, jnp.int32),
         }
 
-    def sched_admit(self, state: dict, slot: int, request: Request) -> dict:
-        """Prefill ``request`` alone and splice it into batch row ``slot``."""
+    def _validate_request(self, request: Request) -> int:
         plen = len(request.prompt)
         if plen < 1:
             raise ValueError("empty prompt")
@@ -220,20 +286,103 @@ class DecodeEngine:
             raise ValueError(
                 f"prompt ({plen}) + max_new_tokens ({request.max_new_tokens}) "
                 f"exceeds engine max_len {self.max_len}")
+        return plen
+
+    @staticmethod
+    def _admit_commit(state: dict, cache1: dict, logits1, slot, index0,
+                      remaining, stop) -> dict:
+        """Splice a fully-prefilled single-row cache into batch row ``slot``
+        and arm the slot — the ONE place the per-slot arming invariant
+        (cache/logits/live/index/remaining/stop) lives; both the chunked and
+        the whole-prompt admission paths commit through it.  All scalars
+        arrive as traced int32, so one trace serves every (slot,
+        prompt-length, budget) combination."""
+        def splice(big, one):
+            idx = (0, slot) + (0,) * (big.ndim - 2)
+            return jax.lax.dynamic_update_slice(big, one.astype(big.dtype), idx)
+
+        return dict(
+            cache=jax.tree.map(splice, state["cache"], cache1),
+            logits=state["logits"].at[slot].set(logits1),
+            live=state["live"].at[slot].set(True),
+            index=state["index"].at[slot].set(index0),
+            remaining=state["remaining"].at[slot].set(remaining),
+            stop=state["stop"].at[slot].set(stop),
+        )
+
+    def _commit(self, state: dict, slot: int, cache1: dict, logits1,
+                request: Request) -> dict:
+        stop = -1 if request.stop_token is None else int(request.stop_token)
+        return self._admit_commit_fn(
+            state, cache1, logits1,
+            jnp.asarray(slot, jnp.int32),
+            jnp.asarray(len(request.prompt) - 1, jnp.int32),
+            jnp.asarray(request.max_new_tokens, jnp.int32),
+            jnp.asarray(stop, jnp.int32))
+
+    def sched_admit_start(self, state: dict, slot: int, request: Request):
+        """Begin admitting ``request`` into ``slot``.  Returns
+        ``(state, pending)``: ``pending is None`` means the admission
+        completed atomically (whole-prompt fallback archs); otherwise feed it
+        to :meth:`sched_admit_step` until it returns ``None`` — each call
+        prefills one fixed-size prompt chunk, so a scheduler can interleave
+        decode steps to bound co-batched time-to-first-token.
+
+        The in-flight prefill runs against a private single-row cache and is
+        spliced into the live batch only on the final chunk, so decode steps
+        on the other rows proceed untouched throughout."""
+        plen = self._validate_request(request)
+        if not self.chunked_admission:
+            return self._admit_whole(state, slot, request), None
+        C = self.prefill_chunk
+        prompt = np.asarray(request.prompt, np.int32)
+        chunks = []
+        for start, valid in prefill_chunks_of(plen, C):
+            toks = np.full((1, C), PAD_TOKEN, np.int32)
+            toks[0, :valid] = prompt[start:start + valid]
+            pos = np.full((1, C), -1, np.int32)
+            pos[0, :valid] = np.arange(start, start + valid)
+            chunks.append((jnp.asarray(toks), jnp.asarray(pos),
+                           jnp.asarray(valid - 1, jnp.int32)))
+        pending = {
+            "request": request, "slot": slot, "plen": plen,
+            "chunks": chunks, "i": 0,
+            "cache": init_cache(self.cfg, 1, self.max_len),
+        }
+        return state, pending
+
+    def sched_admit_step(self, state: dict, pending: dict):
+        """Advance an in-flight admission by one prompt chunk; on the final
+        chunk splice the prefilled row into the live state and arm the slot.
+        Returns ``(state, pending | None)``."""
+        toks, pos, take = pending["chunks"][pending["i"]]
+        pending["cache"], logits1 = self._prefill_chunk_fn(
+            self.params, pending["cache"], toks, pos, take)
+        pending["i"] += 1
+        if pending["i"] < len(pending["chunks"]):
+            return state, pending
+        state = self._commit(state, pending["slot"], pending["cache"],
+                             logits1[0], pending["request"])
+        return state, None
+
+    def _admit_whole(self, state: dict, slot: int, request: Request) -> dict:
+        """Whole-prompt fallback admission for architectures without
+        chunked-prefill support: one single-row `prefill` (retraces per
+        prompt length — the cost the chunked path avoids) committed through
+        the same splice as the chunked path."""
         batch = {"tokens": jnp.asarray(np.asarray(request.prompt,
                                                   np.int32)[None]),
                  **self._stub_inputs(1)}
-        cache, logits1 = self._prefill_slot(self.params, state["cache"], batch,
-                                            jnp.asarray(slot, jnp.int32))
-        stop = -1 if request.stop_token is None else int(request.stop_token)
-        return dict(
-            cache=cache,
-            logits=state["logits"].at[slot].set(logits1),
-            live=state["live"].at[slot].set(True),
-            index=state["index"].at[slot].set(plen - 1),
-            remaining=state["remaining"].at[slot].set(request.max_new_tokens),
-            stop=state["stop"].at[slot].set(stop),
-        )
+        cache1, logits = self._prefill(self.params, batch)
+        return self._commit(state, slot, cache1, logits[0], request)
+
+    def sched_admit(self, state: dict, slot: int, request: Request) -> dict:
+        """Atomic admission: prefill ``request`` (chunked where supported)
+        and splice it into batch row ``slot`` before returning."""
+        state, pending = self.sched_admit_start(state, slot, request)
+        while pending is not None:
+            state, pending = self.sched_admit_step(state, pending)
+        return state
 
     def sched_step(self, state: dict):
         self._key, k = jax.random.split(self._key)
@@ -242,15 +391,20 @@ class DecodeEngine:
 
     def serve(self, requests: list[Request], *,
               on_token: Callable[[Request, int], None] | None = None,
-              max_steps: int | None = None) -> list[Request]:
+              max_steps: int | None = None,
+              admission_budget: int | None = None) -> list[Request]:
         """Run requests through the continuous-batching scheduler: FIFO
         admission, per-slot positions, finished slots refilled mid-flight.
         Any number of requests — slots turn over as requests finish.
+        ``admission_budget`` caps prefill chunks per scheduler step (None =
+        complete each admission immediately), bounding time-to-first-token
+        for co-batched requests while a long prompt is admitted.
         Returns ``requests`` (same objects, ``out`` filled, in input order).
         """
         from repro.serving.scheduler import ContinuousScheduler
 
-        sched = ContinuousScheduler(self, on_token=on_token)
+        sched = ContinuousScheduler(self, on_token=on_token,
+                                    admission_budget=admission_budget)
         for r in requests:
             sched.submit(r)
         sched.run(max_steps=max_steps)

@@ -245,9 +245,15 @@ def test_engine_autotune_shapes(packed_smoke_model, tmp_autotune_cache):
     from repro.serving.engine import DecodeEngine
 
     cfg, sp = packed_smoke_model
-    eng = DecodeEngine(sp, cfg, batch_size=2, max_len=32)
+    eng = DecodeEngine(sp, cfg, batch_size=2, max_len=32, prefill_chunk=8)
     results = eng.autotune_shapes(reps=1, kernels=["ref", "signflip"])
-    assert sorted(results) == layer_matmul_shapes(cfg, 2)
+    # decode shapes (M = B) plus the admission-chunk bucket shape
+    # (M = 1·chunk: requests prefill one at a time, chunk by chunk), so
+    # policy="auto" admission hits measured entries instead of the prior
+    want = set(layer_matmul_shapes(cfg, 2))
+    want |= set(layer_matmul_shapes(cfg, 1, seq_len=8))
+    assert sorted(results) == sorted(want)
+    assert sorted(results) == eng.matmul_shape_universe()
     cache = dp.get_autotune_cache()
     for (m, k, n) in results:
         assert cache.best(m, k, n, cfg.dtype, jax.default_backend()) is not None

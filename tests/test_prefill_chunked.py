@@ -1,0 +1,120 @@
+"""Chunked, length-bucketed prefill: the differential oracle.
+
+Chunked prefill (``prefill_chunk`` scans, the continuous-admission path)
+must reproduce whole-prompt ``prefill`` — same ring layout bit-for-bit,
+same KV, same last-position logits up to bf16 accumulation noise — for
+windowed and non-windowed configs, including prompts with ``S >= CL`` that
+wrap the ring (the configuration the pre-fix slot misalignment corrupted).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.models.decode import (
+    cache_len,
+    decode_step,
+    prefill,
+    prefill_chunk,
+    prefill_chunked,
+    prefill_chunks_of,
+    quantize_for_serving,
+    supports_chunked_prefill,
+)
+from repro.models.model import init_params
+
+# a few bf16 ulps at the observed logit scale (|logits| <~ 8 on the tiny
+# random models): chunked attention merges online-softmax chunks in a
+# different order than the whole-prompt pass, so the last bf16 bits differ
+TOL = dict(rtol=2e-2, atol=8e-2)
+
+
+def _tiny(window=0):
+    cfg = get_smoke_config("bitnet-b1.58-2b").with_(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=256, loss_chunk=32, window=window, remat=False)
+    sp = quantize_for_serving(init_params(cfg, jax.random.PRNGKey(0)), cfg)
+    return cfg, sp
+
+
+def _close(a, b, **kw):
+    a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+    m = np.abs(a) < 1e29  # finite logits (vocab padding is -1e30)
+    np.testing.assert_allclose(b[m], a[m], **kw)
+
+
+@pytest.mark.parametrize("window,S,chunk", [
+    (0, 12, 5),    # non-windowed, uneven final chunk
+    (0, 12, 12),   # single chunk == whole prompt
+    (8, 12, 5),    # ring wrap: S >= CL, prefill crosses the ring boundary
+    (8, 20, 8),    # chunk == ring length, multiple wraps
+    (8, 6, 4),     # windowed but prompt shorter than the ring
+])
+def test_chunked_prefill_matches_whole_prefill(window, S, chunk):
+    cfg, sp = _tiny(window=window)
+    s_max = 48
+    rng = np.random.default_rng(S * 7 + chunk)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, size=(2, S)), jnp.int32)
+    batch = {"tokens": toks}
+    cache_w, logits_w = prefill(sp, cfg, batch, s_max=s_max)
+    cache_c, logits_c = prefill_chunked(sp, cfg, batch, s_max=s_max,
+                                        chunk=chunk)
+    # identical ring layout: the canonical invariant means slot occupancy is
+    # a pure function of the positions written, not of the chunking
+    np.testing.assert_array_equal(np.asarray(cache_c["pos"]),
+                                  np.asarray(cache_w["pos"]))
+    _close(logits_w, logits_c, **TOL)
+    np.testing.assert_allclose(np.asarray(cache_c["k"], np.float32),
+                               np.asarray(cache_w["k"], np.float32), **TOL)
+    np.testing.assert_allclose(np.asarray(cache_c["v"], np.float32),
+                               np.asarray(cache_w["v"], np.float32), **TOL)
+    # both caches decode on identically from here
+    for t in range(S, S + 3):
+        tok = jnp.asarray(rng.integers(1, cfg.vocab_size, size=(2,)), jnp.int32)
+        lw, cache_w = decode_step(sp, cfg, cache_w, tok, jnp.asarray(t, jnp.int32))
+        lc, cache_c = decode_step(sp, cfg, cache_c, tok, jnp.asarray(t, jnp.int32))
+        _close(lw, lc, **TOL)
+
+
+def test_chunk_larger_than_ring_raises():
+    cfg, sp = _tiny(window=8)
+    cache, _ = prefill(sp, cfg, {"tokens": jnp.ones((1, 4), jnp.int32)},
+                       s_max=32)
+    toks = jnp.ones((1, 12), jnp.int32)
+    pos = jnp.arange(12, dtype=jnp.int32)[None]
+    with pytest.raises(ValueError, match="exceeds ring length"):
+        prefill_chunk(sp, cfg, cache, toks, pos)
+
+
+def test_chunked_prefill_unsupported_arch_raises():
+    cfg = get_smoke_config("zamba2-2.7b").with_(window=8, remat=False)
+    sp = quantize_for_serving(init_params(cfg, jax.random.PRNGKey(0)), cfg)
+    assert not supports_chunked_prefill(sp, cfg)
+    with pytest.raises(NotImplementedError):
+        prefill_chunked(sp, cfg, {"tokens": jnp.ones((1, 8), jnp.int32)},
+                        s_max=16, chunk=4)
+
+
+def test_prefill_chunks_of():
+    assert prefill_chunks_of(1, 4) == [(0, 1)]
+    assert prefill_chunks_of(8, 4) == [(0, 4), (4, 4)]
+    assert prefill_chunks_of(9, 4) == [(0, 4), (4, 4), (8, 1)]
+    with pytest.raises(ValueError):
+        prefill_chunks_of(0, 4)
+
+
+def test_padded_tail_never_writes_kv():
+    """The padded tail of a final chunk must not write KV, positions, or be
+    attendable: pad positions are -1 → their ring slot maps past the cache
+    end and the scatter drops."""
+    cfg, sp = _tiny(window=0)
+    S, chunk = 5, 4  # final chunk has 3 padded tail tokens
+    toks = jnp.asarray(np.arange(2, 2 + S)[None], jnp.int32)
+    cache, _ = prefill_chunked(sp, cfg, {"tokens": toks}, s_max=16,
+                               chunk=chunk)
+    pos = np.asarray(cache["pos"][0, 0])
+    np.testing.assert_array_equal(pos[:S], np.arange(S))
+    np.testing.assert_array_equal(pos[S:], -1)
+    assert (np.asarray(cache["k"][0, 0, S:], np.float32) == 0).all()

@@ -149,13 +149,14 @@ def test_submit_completed_request_rejected():
 # ---------------------------------------------------------------------------
 
 
-def _tiny_engine(key, B=2, max_len=48):
+def _tiny_engine(key, B=2, max_len=48, window=0, prefill_chunk=32):
     cfg = get_smoke_config("bitnet-b1.58-2b").with_(
         n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
-        d_ff=128, vocab_size=256, loss_chunk=32)
+        d_ff=128, vocab_size=256, loss_chunk=32, window=window)
     sp = quantize_for_serving(init_params(cfg, key), cfg)
     return DecodeEngine(sp, cfg, batch_size=B, max_len=max_len,
-                        matmul_policy="fixed:ref")
+                        matmul_policy="fixed:ref",
+                        prefill_chunk=prefill_chunk)
 
 
 def test_run_overflow_raises_value_error(key):
@@ -242,6 +243,126 @@ def test_continuous_stop_token_matches_oracle(key):
     eng.serve([r, other], max_steps=200)
     assert r.out == want
     assert other.out == _single_request_oracle(eng, [7], 4)
+
+
+def test_continuous_matches_oracle_windowed(key):
+    """Differential oracle, windowed config with prompts LONGER than the
+    window — prefill wraps the ring, exactly where the slot-invariant bug
+    hid: decode after a misaligned prefill silently dropped one attended
+    in-window key per step.  Greedy streams must match the single-request
+    oracle (up to bf16 argmax ties: multi-chunk admission merges attention
+    chunks in a different order than whole-prompt prefill)."""
+    eng = _tiny_engine(key, B=2, window=8, prefill_chunk=8)
+    specs = [([3, 4, 5, 6, 7, 8, 9, 10, 11, 12], 6),  # S=10 >= CL=8: wraps
+             ([7, 2], 4),
+             ([9, 2, 11, 4, 13, 6, 15, 8, 17], 5),    # S=9: wraps mid-chunk
+             ([6, 6, 6], 7)]
+    reqs = [Request(prompt=p, max_new_tokens=n) for p, n in specs]
+    eng.serve(reqs, max_steps=200)
+    for r in reqs:
+        assert r.done and len(r.out) == r.max_new_tokens
+        _assert_matches_oracle_up_to_ties(eng, r)
+
+
+def test_admission_compiles_one_trace_per_bucket(key):
+    """Bucketed admission: a mixed-length request stream must compile the
+    chunked prefill exactly once (one chunk shape = one bucket) and the
+    commit exactly once — not one trace per prompt length, which is what the
+    whole-prompt fallback path costs."""
+    eng = _tiny_engine(key, B=2, prefill_chunk=4)
+    reqs = [Request(prompt=[2 + j for j in range(1 + i)], max_new_tokens=2)
+            for i in range(7)]  # prompt lengths 1..7: 1- and 2-chunk buckets
+    eng.serve(reqs, max_steps=400)
+    assert all(r.done and len(r.out) == 2 for r in reqs)
+    assert eng.chunked_admission
+    assert eng.trace_counts["prefill_chunk"] == 1, eng.trace_counts
+    assert eng.trace_counts["admit_commit"] == 1, eng.trace_counts
+    # the retracing whole-prompt fallback was never taken
+    assert eng.trace_counts["prefill"] == 0, eng.trace_counts
+    assert eng.trace_counts["sched_step"] == 1, eng.trace_counts
+
+
+def test_admission_budget_interleaves_decode_with_long_prefill(key):
+    """With an admission budget, a long arriving prompt is prefilled a chunk
+    at a time while the co-batched live request keeps emitting tokens — its
+    time-to-next-token stays bounded — and every stream still matches the
+    single-request oracle."""
+    eng = _tiny_engine(key, B=2, prefill_chunk=2, max_len=64)
+    short = Request(prompt=[3], max_new_tokens=10)
+    long = Request(prompt=[5 + i for i in range(12)], max_new_tokens=4)
+
+    sched = ContinuousScheduler(eng, admission_budget=1)
+    order = []
+    short.on_token = lambda r, t: order.append("s")
+    long.on_token = lambda r, t: order.append("l")
+    sched.submit(short)
+    sched.submit(long)
+    steps = 0
+    while sched.pending:
+        sched.step()
+        steps += 1
+        assert steps < 200
+    assert short.done and long.done
+    # the long prompt needed 6 chunks at budget 1; the short request decoded
+    # throughout, so its first several tokens precede long's first token
+    first_l = order.index("l")
+    assert first_l >= 5, order
+    assert sched.stats.prefill_chunks >= 6 + 1  # long (6) + short (1)
+    _assert_matches_oracle_up_to_ties(eng, short)
+    _assert_matches_oracle_up_to_ties(eng, long)
+
+
+def test_prefill_into_slot_splices_one_row(key):
+    """The standalone atomic refill API: prefill one request and splice it
+    into a single batch row — the other rows stay bit-identical and the
+    spliced row equals a fresh single-request prefill."""
+    from repro.models.decode import prefill, prefill_into_slot
+
+    eng = _tiny_engine(key, B=2)
+    sp, cfg = eng.params, eng.cfg
+    toks = jnp.asarray([[3, 4, 5], [7, 8, 9]], jnp.int32)
+    cache, _ = prefill(sp, cfg, {"tokens": toks}, s_max=eng.max_len)
+    new_prompt = jnp.asarray([[11, 12]], jnp.int32)
+    spliced, logits1 = prefill_into_slot(sp, cfg, cache,
+                                         {"tokens": new_prompt},
+                                         jnp.asarray(1, jnp.int32),
+                                         s_max=eng.max_len)
+    alone, logits_alone = prefill(sp, cfg, {"tokens": new_prompt},
+                                  s_max=eng.max_len)
+    for leaf in ("k", "v", "pos"):
+        np.testing.assert_array_equal(  # untouched row is bit-identical
+            np.asarray(spliced[leaf][:, 0], np.float32),
+            np.asarray(cache[leaf][:, 0], np.float32))
+        np.testing.assert_array_equal(  # spliced row == solo prefill row
+            np.asarray(spliced[leaf][:, 1], np.float32),
+            np.asarray(alone[leaf][:, 0], np.float32))
+    np.testing.assert_array_equal(np.asarray(logits1),
+                                  np.asarray(logits_alone[0]))
+
+
+def test_fallback_arch_whole_prompt_admission(key):
+    """Architectures without chunked-prefill support (recurrent state:
+    zamba2) admit through the whole-prompt fallback — same commit splice,
+    same oracle guarantees, `pending` returned as None from
+    sched_admit_start."""
+    cfg = get_smoke_config("zamba2-2.7b").with_(window=8, remat=False)
+    sp = quantize_for_serving(init_params(cfg, key), cfg)
+    eng = DecodeEngine(sp, cfg, batch_size=2, max_len=48,
+                       matmul_policy="fixed:ref")
+    assert not eng.chunked_admission
+    # zamba2 prompts must be >= ssm_conv - 1 (conv state needs that many
+    # tokens; a pre-existing prefill limitation, not an admission one)
+    reqs = [Request(prompt=[3, 4, 5], max_new_tokens=3),
+            Request(prompt=[7, 8, 9, 10], max_new_tokens=2),
+            Request(prompt=[9, 2, 4, 6, 8], max_new_tokens=2)]
+    eng.serve(reqs, max_steps=100)
+    for r in reqs:
+        assert r.done and len(r.out) == r.max_new_tokens
+        _assert_matches_oracle_up_to_ties(eng, r)
+    assert eng.trace_counts["prefill_chunk"] == 0
+    # whole-prompt fallback retraces per distinct prompt length (3 here:
+    # plens 3, 4, 5) — the cost the chunked path avoids
+    assert eng.trace_counts["prefill"] == 3, eng.trace_counts
 
 
 def test_scheduler_refills_freed_slots(key):
