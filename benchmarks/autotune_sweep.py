@@ -26,7 +26,7 @@ import argparse
 
 from repro.configs.registry import ARCHS, get_smoke_config
 from repro.kernels import dispatch
-from repro.models.decode import layer_matmul_shapes
+from repro.models.decode import layer_grouped_matmul_shapes, layer_matmul_shapes
 
 
 def sweep(archs: list[str], batch_sizes: list[int], *, full: bool = False,
@@ -35,24 +35,30 @@ def sweep(archs: list[str], batch_sizes: list[int], *, full: bool = False,
     """``dtypes=None`` benchmarks each arch at its own serving activation
     dtype (``cfg.dtype``, normally bfloat16) — the dtype the cache key must
     match for serving dispatch to hit the entries.  Group size is always the
-    arch's ``cfg.mu`` for the same reason."""
+    arch's ``cfg.mu`` for the same reason.  MoE archs contribute their
+    grouped expert-stack problems ``(E, C, K, N)`` alongside the dense
+    triples (job key: ``e=None`` marks a dense problem)."""
     cache = dispatch.get_autotune_cache()
-    jobs: set[tuple[int, int, int, str, int]] = set()
+    jobs: set[tuple[int | None, int, int, int, str, int]] = set()
     for arch in archs:
         cfg = ARCHS[arch] if full else get_smoke_config(arch)
         for b in batch_sizes:
-            for (m, k, n) in layer_matmul_shapes(cfg, b):
-                for dt in (dtypes or (cfg.dtype,)):
-                    jobs.add((m, k, n, dt, cfg.mu))
+            for dt in (dtypes or (cfg.dtype,)):
+                for (m, k, n) in layer_matmul_shapes(cfg, b):
+                    jobs.add((None, m, k, n, dt, cfg.mu))
+                for (e, c, k, n) in layer_grouped_matmul_shapes(cfg, b):
+                    jobs.add((e, c, k, n, dt, cfg.mu))
 
     results = {}
-    for i, (m, k, n, dt, mu) in enumerate(sorted(jobs)):
+    key = lambda j: tuple(x if x is not None else -1 for x in j)
+    for i, (e, m, k, n, dt, mu) in enumerate(sorted(jobs, key=key)):
         timings = dispatch.autotune(m, k, n, dt, reps=reps, cache=cache,
-                                    save=False, mu=mu)
-        results[(m, k, n, dt, mu)] = timings
+                                    save=False, mu=mu, e=e)
+        results[(e, m, k, n, dt, mu)] = timings
         if verbose and timings:
             best = min(timings, key=timings.get)
-            print(f"[{i + 1}/{len(jobs)}] M{m} K{k} N{n} mu{mu} {dt}: "
+            tag = f"E{e} " if e is not None else ""
+            print(f"[{i + 1}/{len(jobs)}] {tag}M{m} K{k} N{n} mu{mu} {dt}: "
                   f"best={best} ({timings[best]:.0f}us of "
                   f"{len(timings)} kernels)")
     cache.save()

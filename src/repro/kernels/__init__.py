@@ -13,12 +13,14 @@ prior, and a disk-persisted autotune cache.  New call sites should use
 from repro.kernels.dispatch import (  # noqa: F401
     REGISTRY,
     AutotuneCache,
+    GroupedTernaryWeight,
     KernelSpec,
     TernaryWeight,
     autotune,
     eligible_kernels,
     get_autotune_cache,
     get_kernel,
+    grouped_ternary_matmul,
     kernel_names,
     register_kernel,
     reset_autotune_cache,

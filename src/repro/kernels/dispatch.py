@@ -8,24 +8,31 @@ hard-wiring:
 
   * a **registry** of every ternary matmul implementation in this package
     (``ref``, ``lut_onehot``, ``lut_gather``, ``dequant_packed``,
-    ``signflip``, ``w2a8``) with its supported activation dtypes and shape
-    constraints,
+    ``signflip``, ``w2a8``, plus the grouped batched-expert family
+    ``grouped_ref``/``grouped_dequant``/``grouped_w2a8``) with its supported
+    activation dtypes and shape constraints,
   * a **static prior** derived from the analytical cost model
     (:mod:`repro.core.cost_model`): per-MAC gate cost of each datapath plus a
     weight-bytes-streamed term, so small-M (decode) shapes lean to the packed
     1.6 b/w paths and large-M (prefill) shapes to the cheapest compute,
   * a **benchmark-driven autotune cache** keyed on
-    ``(M, K, N, activation_dtype, backend)`` and persisted to disk
-    (``REPRO_AUTOTUNE_CACHE``, default ``~/.cache/repro/autotune.json``),
-    populated by :func:`autotune` / ``benchmarks/autotune_sweep.py``,
-  * a single public entry point::
+    ``(M, K, N, activation_dtype, backend)`` — grouped problems prepend the
+    expert count ``E`` — persisted to disk (``REPRO_AUTOTUNE_CACHE``, default
+    ``~/.cache/repro/autotune.json``), populated by :func:`autotune` /
+    ``benchmarks/autotune_sweep.py``,
+  * two public entry points::
 
         y = ternary_matmul(x, w, policy="auto")          # cache → prior
         y = ternary_matmul(x, w, policy="fixed:signflip")  # reproducible pin
+        y = grouped_ternary_matmul(t, gw)  # [E, C, K] × stacked experts
 
 Shape convention: ``x [..., K]`` activations, weights ``[N, K]`` (out-major,
-as everywhere in this repo), result ``[..., N]``.  All kernels consume
-*unscaled* trits; the BitNet absmean scale is applied once on the way out.
+as everywhere in this repo), result ``[..., N]``.  Grouped (MoE expert)
+problems carry a leading expert dim on both operands: ``x [E, ..., K]``
+against a :class:`GroupedTernaryWeight` holding stacked ``[E, N, K]`` trits
+(stored as ``[E, N, ceil(K/5)]`` packed bytes) with a per-expert rank-1
+scale.  All kernels consume *unscaled* trits; the BitNet absmean scale is
+applied once on the way out.
 
 On CPU the Pallas kernels run in interpret mode, which is functionally exact
 but orders of magnitude slower than XLA — the prior carries a backend-aware
@@ -38,6 +45,7 @@ from __future__ import annotations
 import json
 import math
 import os
+import tempfile
 import time
 import warnings
 from dataclasses import dataclass, field
@@ -50,14 +58,16 @@ import numpy as np
 from repro.core import encoding
 from repro.core import cost_model as cm
 from repro.kernels.dequant_matmul import packed_matmul
+from repro.kernels.grouped_matmul import grouped_packed_matmul, grouped_w2a8_matmul
 from repro.kernels.lut_matmul import lut_matmul
 from repro.kernels.signflip_matmul import signflip_matmul
 from repro.kernels.w2a8_matmul import w2a8_matmul
 
 __all__ = [
-    "TernaryWeight", "KernelSpec", "REGISTRY", "register_kernel",
-    "kernel_names", "get_kernel", "eligible_kernels", "select_kernel",
-    "static_prior", "ternary_matmul", "autotune",
+    "TernaryWeight", "GroupedTernaryWeight", "KernelSpec", "REGISTRY",
+    "register_kernel", "kernel_names", "get_kernel", "eligible_kernels",
+    "select_kernel", "static_prior", "ternary_matmul",
+    "grouped_ternary_matmul", "autotune",
     "AutotuneCache", "get_autotune_cache", "reset_autotune_cache",
     "DEFAULT_POLICY_ENV",
 ]
@@ -77,6 +87,14 @@ INTERPRET_PENALTY = 1e4
 # ---------------------------------------------------------------------------
 # Unified weight container
 # ---------------------------------------------------------------------------
+
+
+def _concrete(v: jax.Array) -> bool:
+    """Derived encodings are cached only when concrete: a value computed
+    while tracing (e.g. the weight arrived as a jit argument) is a Tracer
+    and caching it would leak it into later traces
+    (UnexpectedTracerError)."""
+    return not isinstance(v, jax.core.Tracer)
 
 
 class TernaryWeight:
@@ -133,21 +151,14 @@ class TernaryWeight:
     def in_features(self) -> int:
         return self._k
 
-    # -- encodings ----------------------------------------------------------
-    # Derived encodings are cached only when concrete: a value computed while
-    # tracing (e.g. the weight arrived as a jit argument) is a Tracer and
-    # caching it would leak it into later traces (UnexpectedTracerError).
-
-    @staticmethod
-    def _concrete(v: jax.Array) -> bool:
-        return not isinstance(v, jax.core.Tracer)
+    # -- encodings (cached via module-level _concrete gate) ------------------
 
     def trits(self) -> jax.Array:
         """Dense ``[N, K]`` int8 trits (ref/signflip paths)."""
         if self._w_t is not None:
             return self._w_t
         w_t = encoding.unpack_base3(self._packed, self._k)
-        if self._concrete(w_t):
+        if _concrete(w_t):
             self._w_t = w_t
         return w_t
 
@@ -156,7 +167,7 @@ class TernaryWeight:
         if self._packed is not None:
             return self._packed
         packed = encoding.pack_base3(self._w_t)
-        if self._concrete(packed):
+        if _concrete(packed):
             self._packed = packed
         return packed
 
@@ -166,7 +177,7 @@ class TernaryWeight:
         if mu in self._keys:
             return self._keys[mu]
         keys = encoding.encode_weight_matrix(self.trits(), mu)
-        if self._concrete(keys):
+        if _concrete(keys):
             self._keys[mu] = keys
         return keys
 
@@ -187,6 +198,100 @@ def _as_weight(w, scale, mu) -> TernaryWeight:
                                       mu=mu or 3)
 
 
+class GroupedTernaryWeight:
+    """A stacked per-expert ternary weight ``[E, N, K]`` with per-expert
+    scales ``[E]`` — the MoE analogue of :class:`TernaryWeight`.
+
+    The serving artifact form is ``{"packed": uint8 [E, N, ceil(K/5)+pad],
+    "scale": [E]}`` (``quantize_for_serving`` pads the byte dim for TP
+    shardability; kernels slice decode at the logical ``K``).  Dense trits
+    and packed bytes are derived lazily from each other, with the same
+    concreteness-gated caching as the dense container.
+    """
+
+    def __init__(self, w_t: jax.Array | None = None, scale=1.0, *,
+                 packed: jax.Array | None = None, k: int | None = None,
+                 mu: int = 3):
+        if w_t is None and packed is None:
+            raise ValueError("need trits or packed bytes")
+        if w_t is not None and w_t.dtype != jnp.int8:
+            w_t = w_t.astype(jnp.int8)
+        if (w_t if w_t is not None else packed).ndim != 3:
+            raise ValueError(
+                "grouped weights are stacked [E, N, K] trits / "
+                f"[E, N, ceil(K/5)] bytes; got ndim "
+                f"{(w_t if w_t is not None else packed).ndim}")
+        self._w_t = w_t
+        self._packed = packed
+        self._k = int(w_t.shape[-1]) if w_t is not None else int(k)
+        self.scale = scale
+        self.mu = mu
+
+    @classmethod
+    def from_ternary(cls, w_t: jax.Array, scale=1.0, *,
+                     mu: int = 3) -> "GroupedTernaryWeight":
+        return cls(w_t, scale, mu=mu)
+
+    @classmethod
+    def from_packed(cls, packed: jax.Array, scale, k: int, *,
+                    mu: int = 3) -> "GroupedTernaryWeight":
+        """Stacked deployment artifact ``{"packed" [E, N, ceil(K/5)],
+        "scale" [E]}`` → container (this is what ``layers._expert_matmul``
+        receives after the per-layer scan slice)."""
+        return cls(None, scale, packed=packed, k=k, mu=mu)
+
+    # -- shapes -------------------------------------------------------------
+
+    @property
+    def n_experts(self) -> int:
+        src = self._w_t if self._w_t is not None else self._packed
+        return int(src.shape[0])
+
+    @property
+    def out_features(self) -> int:
+        src = self._w_t if self._w_t is not None else self._packed
+        return int(src.shape[1])
+
+    @property
+    def in_features(self) -> int:
+        return self._k
+
+    # -- encodings (cached via module-level _concrete gate) ------------------
+
+    def trits(self) -> jax.Array:
+        """Dense stacked ``[E, N, K]`` int8 trits.  NOTE: this materializes
+        the full expert stack — kernels should prefer :meth:`packed` and
+        decode tile-by-tile (or per expert)."""
+        if self._w_t is not None:
+            return self._w_t
+        w_t = encoding.unpack_base3(self._packed, self._k)
+        if _concrete(w_t):
+            self._w_t = w_t
+        return w_t
+
+    def packed(self) -> jax.Array:
+        """Stacked base-3 packed bytes ``[E, N, ceil(K/5)]``."""
+        if self._packed is not None:
+            return self._packed
+        packed = encoding.pack_base3(self._w_t)
+        if _concrete(packed):
+            self._packed = packed
+        return packed
+
+
+def _as_grouped_weight(w, scale, mu) -> GroupedTernaryWeight:
+    if isinstance(w, GroupedTernaryWeight):
+        return w
+    w = jnp.asarray(w)
+    if w.dtype != jnp.int8 or w.ndim != 3:
+        raise TypeError(
+            "grouped_ternary_matmul weights must be a GroupedTernaryWeight "
+            f"or a stacked int8 trit array [E, N, K]; got dtype {w.dtype} "
+            f"ndim {w.ndim}")
+    return GroupedTernaryWeight.from_ternary(
+        w, 1.0 if scale is None else scale, mu=mu or 3)
+
+
 # ---------------------------------------------------------------------------
 # Kernel registry
 # ---------------------------------------------------------------------------
@@ -196,8 +301,14 @@ def _as_weight(w, scale, mu) -> TernaryWeight:
 class KernelSpec:
     """One registered ternary-matmul implementation.
 
-    ``run(x2, w, mu, interpret)`` consumes ``x2 [M, K]`` and returns the
-    *unscaled* ``[M, N] float32`` product against ``w.trits()``.
+    Dense kernels: ``run(x2, w, mu, interpret)`` consumes ``x2 [M, K]`` and
+    returns the *unscaled* ``[M, N] float32`` product against ``w.trits()``.
+
+    Grouped kernels (``grouped=True``): ``run(x3, gw, mu, interpret)``
+    consumes ``x3 [E, C, K]`` against a :class:`GroupedTernaryWeight` and
+    returns unscaled ``[E, C, N]`` (float32, or int32 cast to f32).  A
+    grouped problem is keyed by its expert count ``e``; dense and grouped
+    kernels are never eligible for each other's problems.
     """
 
     name: str
@@ -208,8 +319,14 @@ class KernelSpec:
     weight_bytes: Callable            # (K, N, mu) -> HBM bytes streamed
     describe: str = ""
     constraint: Callable | None = None  # (M, K, N, act_dtype) -> bool
+    grouped: bool = False             # batched-expert (MoE) kernel
+    grouped_variant: str | None = None  # dense kernel's grouped analogue
+                                        # (fixed:<dense> pins map through it)
 
-    def supports(self, m: int, k: int, n: int, act_dtype: str) -> bool:
+    def supports(self, m: int, k: int, n: int, act_dtype: str,
+                 e: int | None = None) -> bool:
+        if (e is not None) != self.grouped:
+            return False
         if act_dtype not in self.act_dtypes:
             return False
         if self.constraint is not None and not self.constraint(m, k, n, act_dtype):
@@ -240,8 +357,9 @@ def get_kernel(name: str) -> KernelSpec:
     return REGISTRY[name]
 
 
-def eligible_kernels(m: int, k: int, n: int, act_dtype: str) -> list[KernelSpec]:
-    return [s for s in REGISTRY.values() if s.supports(m, k, n, act_dtype)]
+def eligible_kernels(m: int, k: int, n: int, act_dtype: str,
+                     e: int | None = None) -> list[KernelSpec]:
+    return [s for s in REGISTRY.values() if s.supports(m, k, n, act_dtype, e)]
 
 
 # -- kernel adapters --------------------------------------------------------
@@ -285,6 +403,37 @@ def _run_w2a8(x2, w, mu, interpret):
     return y.astype(jnp.float32)
 
 
+# -- grouped (batched-expert) adapters --------------------------------------
+
+
+def _run_grouped_ref(x3, w, mu, interpret):
+    # Pure-XLA grouped oracle/CPU-serving path: map over experts, decoding
+    # each expert's packed bytes straight to f32 (one typed-table gather)
+    # right before its matmul.  Only ONE expert's dense [N, K] tile is ever
+    # live — the full-stack [E, N, K] dequant the eager einsum path paid
+    # never materializes — and the jaxpr stays E-independent (a scan), so
+    # llama4's E=128 stacks trace as fast as a 2-expert smoke config.
+    k = w.in_features
+
+    def one(args):
+        xe, pe = args
+        we = encoding.unpack_base3_to(pe, k, jnp.float32)  # [N, K] f32
+        return _to_f32(xe) @ we.T
+
+    return jax.lax.map(one, (x3, w.packed()))
+
+
+def _run_grouped_dequant(x3, w, mu, interpret):
+    return grouped_packed_matmul(_to_f32(x3), w.packed(), w.in_features,
+                                 interpret=interpret)
+
+
+def _run_grouped_w2a8(x3, w, mu, interpret):
+    y = grouped_w2a8_matmul(x3, w.packed(), w.in_features,
+                            interpret=interpret)
+    return y.astype(jnp.float32)
+
+
 # -- cost-model hooks (static prior) ----------------------------------------
 
 
@@ -325,6 +474,7 @@ def _bytes_keys(k, n, mu):
 register_kernel(KernelSpec(
     name="ref", run=_run_ref, act_dtypes=_ALL_DTYPES, pallas=False,
     prior_per_mac=_per_mac_dense, weight_bytes=_bytes_dense,
+    grouped_variant="grouped_ref",
     describe="pure-XLA dense f32 matmul over decoded trits (oracle + CPU "
              "serving path)"))
 
@@ -344,6 +494,7 @@ register_kernel(KernelSpec(
 register_kernel(KernelSpec(
     name="dequant_packed", run=_run_dequant, act_dtypes=_ALL_DTYPES,
     pallas=True, prior_per_mac=_per_mac_dequant, weight_bytes=_bytes_packed,
+    grouped_variant="grouped_dequant",
     describe="base-3 packed streaming dequant Pallas kernel (1.6 b/w)"))
 
 register_kernel(KernelSpec(
@@ -354,8 +505,39 @@ register_kernel(KernelSpec(
 register_kernel(KernelSpec(
     name="w2a8", run=_run_w2a8, act_dtypes=frozenset({"int8"}),
     pallas=True, prior_per_mac=_per_mac_dequant, weight_bytes=_bytes_packed,
+    grouped_variant="grouped_w2a8",
     describe="W1.58A8 exact int8×trit→int32 kernel (paper Table I operating "
              "point); requires pre-quantized int8 activations"))
+
+
+def _bytes_decoded_f32(k, n, mu):
+    # grouped_ref streams the packed bytes AND round-trips a decoded f32
+    # tile per expert through memory; charge the decoded stream so packed
+    # in-VMEM decode wins the bandwidth-bound (decode) regime on hardware
+    return 4.0 * k * n
+
+
+register_kernel(KernelSpec(
+    name="grouped_ref", run=_run_grouped_ref, act_dtypes=_ALL_DTYPES,
+    pallas=False, grouped=True, prior_per_mac=_per_mac_dense,
+    weight_bytes=_bytes_decoded_f32,
+    describe="pure-XLA batched-expert matmul: lax.map over experts with "
+             "per-expert f32 table decode (grouped oracle + CPU MoE serving "
+             "path; no [E, N, K] dense intermediate)"))
+
+register_kernel(KernelSpec(
+    name="grouped_dequant", run=_run_grouped_dequant, act_dtypes=_ALL_DTYPES,
+    pallas=True, grouped=True, prior_per_mac=_per_mac_dequant,
+    weight_bytes=_bytes_packed,
+    describe="grouped base-3 packed streaming dequant Pallas kernel: expert "
+             "grid dim, tile-wise VMEM trit decode (1.6 b/w MoE path)"))
+
+register_kernel(KernelSpec(
+    name="grouped_w2a8", run=_run_grouped_w2a8,
+    act_dtypes=frozenset({"int8"}), pallas=True, grouped=True,
+    prior_per_mac=_per_mac_dequant, weight_bytes=_bytes_packed,
+    describe="grouped W1.58A8 exact int8×trit→int32 Pallas kernel with an "
+             "expert grid dim and per-expert rank-1 rescale on the way out"))
 
 
 # ---------------------------------------------------------------------------
@@ -364,7 +546,8 @@ register_kernel(KernelSpec(
 
 
 def static_prior(spec: KernelSpec, m: int, k: int, n: int, act_dtype: str,
-                 backend: str | None = None, mu: int = 3) -> float:
+                 backend: str | None = None, mu: int = 3,
+                 e: int | None = None) -> float:
     """Analytical cost score for running ``spec`` on an ``[m,k]×[n,k]``
     matmul: per-MAC gate cost from the paper's area model (Eqs. 5-10 /
     Fig. 1 baselines) × MAC count, plus the weight bytes streamed from HBM
@@ -372,12 +555,19 @@ def static_prior(spec: KernelSpec, m: int, k: int, n: int, act_dtype: str,
     interpret Pallas (CPU) the Pallas kernels carry
     :data:`INTERPRET_PENALTY` so the prior reflects wall-clock reality
     there; the autotune cache overrides the prior either way.
+
+    Grouped problems pass the expert count ``e``; ``m`` is then the
+    *per-expert* capacity ``C``.  Both terms scale by ``e`` — every expert's
+    weights stream every step regardless of how many tokens routed to it, so
+    at decode (tiny ``C``) the weight-bytes term dominates exactly as in the
+    paper's decode-is-bandwidth-bound regime and the 1.6 b/w grouped paths
+    prevail over dense-decoding ones.
     """
     backend = backend or jax.default_backend()
     coeffs = cm.get_coeffs("int8" if act_dtype == "int8" else "fp16")
     compute = float(m) * k * n * spec.prior_per_mac(k, n, coeffs, mu)
     traffic = GATES_PER_BYTE * spec.weight_bytes(k, n, mu)
-    cost = compute + traffic
+    cost = (compute + traffic) * (e if e is not None else 1)
     if spec.pallas and backend != "tpu":
         cost *= INTERPRET_PENALTY
     return cost
@@ -394,17 +584,27 @@ def _default_cache_path() -> str:
         os.path.join(os.path.expanduser("~"), ".cache", "repro", "autotune.json"))
 
 
+#: current on-disk schema.  v2 added the grouped (batched-expert) key form
+#: ``E<e>:M<C>:K..:N..`` — v1 files hold only dense keys, which are
+#: unchanged, so v1 entries load as-is.
+CACHE_SCHEMA_VERSION = 2
+_COMPATIBLE_SCHEMAS = {1, CACHE_SCHEMA_VERSION}
+
+
 @dataclass
 class AutotuneCache:
-    """Disk-persisted measurements: ``(M,K,N,dtype,backend) → {kernel: µs}``.
+    """Disk-persisted measurements: ``(M,K,N,dtype,backend) → {kernel: µs}``,
+    grouped problems keyed with their expert count prepended.
 
-    JSON format (schema_version 1)::
+    JSON format (schema_version 2)::
 
-        {"schema_version": 1,
-         "entries": {"M8:K1024:N512:mu3:float32:cpu": {"ref": 410.2, ...}}}
+        {"schema_version": 2,
+         "entries": {"M8:K1024:N512:mu3:float32:cpu": {"ref": 410.2, ...},
+                     "E16:M4:K4096:N6400:mu3:bfloat16:tpu": {...}}}
 
     ``mu`` is part of the key: LUT key-decode cost and bytes streamed scale
-    with the group size, so timings at one mu must not steer another.
+    with the group size, so timings at one mu must not steer another.  For
+    grouped keys ``M`` is the *per-expert* capacity ``C``.
     """
 
     path: str = field(default_factory=_default_cache_path)
@@ -412,8 +612,9 @@ class AutotuneCache:
 
     @staticmethod
     def key(m: int, k: int, n: int, act_dtype: str, backend: str, *,
-            mu: int = 3) -> str:
-        return f"M{m}:K{k}:N{n}:mu{mu}:{act_dtype}:{backend}"
+            mu: int = 3, e: int | None = None) -> str:
+        prefix = f"E{e}:" if e is not None else ""
+        return f"{prefix}M{m}:K{k}:N{n}:mu{mu}:{act_dtype}:{backend}"
 
     @classmethod
     def load(cls, path: str | None = None) -> "AutotuneCache":
@@ -422,34 +623,51 @@ class AutotuneCache:
         try:
             with open(path) as fh:
                 doc = json.load(fh)
-            if isinstance(doc, dict) and doc.get("schema_version") == 1:
+            if isinstance(doc, dict) and \
+                    doc.get("schema_version") in _COMPATIBLE_SCHEMAS:
                 entries = doc.get("entries", {})
         except (OSError, ValueError):
             pass
         return cls(path=path, entries=entries)
 
     def save(self) -> None:
-        d = os.path.dirname(self.path)
-        if d:
-            os.makedirs(d, exist_ok=True)
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as fh:
-            json.dump({"schema_version": 1, "entries": self.entries}, fh,
-                      indent=1, sort_keys=True)
-        os.replace(tmp, self.path)
+        """Atomically persist: write a *unique* temp file in the target
+        directory, fsync, then ``os.replace``.  Readers never observe a
+        partial file (mid-write kill) and concurrent writers (parallel
+        ``autotune_sweep.py`` runs) cannot interleave into each other's temp
+        file — last replace wins whole."""
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".autotune-", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as fh:
+                json.dump({"schema_version": CACHE_SCHEMA_VERSION,
+                           "entries": self.entries}, fh,
+                          indent=1, sort_keys=True)
+                fh.flush()
+                os.fsync(fh.fileno())
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     def record(self, m: int, k: int, n: int, act_dtype: str, backend: str,
-               kernel: str, us: float, *, mu: int = 3) -> None:
-        key = self.key(m, k, n, act_dtype, backend, mu=mu)
+               kernel: str, us: float, *, mu: int = 3,
+               e: int | None = None) -> None:
+        key = self.key(m, k, n, act_dtype, backend, mu=mu, e=e)
         self.entries.setdefault(key, {})[kernel] = us
 
-    def timings(self, m, k, n, act_dtype, backend, *, mu: int = 3) -> dict[str, float]:
+    def timings(self, m, k, n, act_dtype, backend, *, mu: int = 3,
+                e: int | None = None) -> dict[str, float]:
         return dict(self.entries.get(
-            self.key(m, k, n, act_dtype, backend, mu=mu), {}))
+            self.key(m, k, n, act_dtype, backend, mu=mu, e=e), {}))
 
     def best(self, m: int, k: int, n: int, act_dtype: str,
-             backend: str, *, mu: int = 3) -> str | None:
-        t = self.timings(m, k, n, act_dtype, backend, mu=mu)
+             backend: str, *, mu: int = 3, e: int | None = None) -> str | None:
+        t = self.timings(m, k, n, act_dtype, backend, mu=mu, e=e)
         t = {name: us for name, us in t.items() if name in REGISTRY}
         return min(t, key=t.get) if t else None
 
@@ -485,7 +703,7 @@ def _act_dtype_name(x: jax.Array) -> str:
 def select_kernel(m: int, k: int, n: int, act_dtype: str, *,
                   policy: str | None = None, backend: str | None = None,
                   cache: AutotuneCache | None = None,
-                  mu: int = 3) -> KernelSpec:
+                  mu: int = 3, e: int | None = None) -> KernelSpec:
     """Resolve a policy to a registered kernel for the given problem.
 
     Policies:
@@ -495,17 +713,34 @@ def select_kernel(m: int, k: int, n: int, act_dtype: str, *,
       * ``"prior"`` — analytical prior only (ignore the cache).
 
     ``policy=None`` reads ``$REPRO_TERNARY_POLICY``, defaulting to ``auto``.
+
+    Grouped (batched-expert) problems pass ``e`` (the expert count, with
+    ``m`` the per-expert capacity); only grouped kernels are then eligible.
+    A ``fixed:<dense-kernel>`` pin resolves through the dense kernel's
+    ``grouped_variant`` (``ref → grouped_ref`` etc.) so ONE policy string
+    governs a whole model — MoE layers included; pinning a dense kernel with
+    no grouped analogue (the LUT/sign-flip paths) raises on MoE problems.
     """
     policy = policy or os.environ.get(DEFAULT_POLICY_ENV, "auto")
     backend = backend or jax.default_backend()
 
     if policy.startswith("fixed:"):
         spec = get_kernel(policy[len("fixed:"):])
-        if not spec.supports(m, k, n, act_dtype):
+        if e is not None and not spec.grouped:
+            if spec.grouped_variant is None:
+                raise ValueError(
+                    f"kernel {spec.name!r} has no grouped (batched-expert) "
+                    f"variant; MoE expert matmuls cannot honour policy "
+                    f"'fixed:{spec.name}'. Pin one of "
+                    f"{sorted(s.name for s in REGISTRY.values() if s.grouped)}"
+                    f" or a dense kernel with a grouped analogue "
+                    f"{sorted(s.name for s in REGISTRY.values() if s.grouped_variant)}")
+            spec = get_kernel(spec.grouped_variant)
+        if not spec.supports(m, k, n, act_dtype, e):
             raise ValueError(
                 f"kernel {spec.name!r} does not support M={m} K={k} N={n} "
-                f"act_dtype={act_dtype} (supported dtypes: "
-                f"{sorted(spec.act_dtypes)})")
+                f"E={e} act_dtype={act_dtype} (supported dtypes: "
+                f"{sorted(spec.act_dtypes)}; grouped={spec.grouped})")
         return spec
 
     if policy not in ("auto", "prior"):
@@ -513,20 +748,21 @@ def select_kernel(m: int, k: int, n: int, act_dtype: str, *,
             f"unknown policy {policy!r}; expected 'auto', 'prior', or "
             f"'fixed:<name>' with name in {sorted(REGISTRY)}")
 
-    candidates = eligible_kernels(m, k, n, act_dtype)
+    candidates = eligible_kernels(m, k, n, act_dtype, e)
     if not candidates:
         raise ValueError(f"no registered kernel supports M={m} K={k} N={n} "
-                         f"act_dtype={act_dtype}")
+                         f"E={e} act_dtype={act_dtype}")
 
     if policy == "auto":
         cache = cache or get_autotune_cache()
-        best = cache.best(m, k, n, act_dtype, backend, mu=mu)
-        if best is not None and get_kernel(best).supports(m, k, n, act_dtype):
+        best = cache.best(m, k, n, act_dtype, backend, mu=mu, e=e)
+        if best is not None and get_kernel(best).supports(m, k, n, act_dtype, e):
             return get_kernel(best)
 
     # name tiebreak keeps selection deterministic across dict orderings
     return min(candidates,
-               key=lambda s: (static_prior(s, m, k, n, act_dtype, backend, mu),
+               key=lambda s: (static_prior(s, m, k, n, act_dtype, backend,
+                                           mu, e),
                               s.name))
 
 
@@ -582,6 +818,56 @@ def ternary_matmul(x: jax.Array, w, *, scale=None, policy: str | None = None,
     return y.reshape(*lead, n).astype(out_dtype)
 
 
+def grouped_ternary_matmul(x: jax.Array, w, *, scale=None,
+                           policy: str | None = None, mu: int | None = None,
+                           interpret: bool | None = None,
+                           backend: str | None = None,
+                           cache: AutotuneCache | None = None) -> jax.Array:
+    """``y[e, ..., n] = Σ_k x[e, ..., k] · trits(w)[e, n, k] · scale[e]`` —
+    the batched-expert (MoE) entry point of the dispatch layer.
+
+    Args:
+      x: ``[E, ..., K]`` per-expert activation rows (MoE dispatch buffers
+        ``[E, C, K]``) — float, or pre-quantized int8 for the W1.58A8 path.
+      w: :class:`GroupedTernaryWeight` or stacked int8 trits ``[E, N, K]``.
+      scale: overrides ``w``'s per-expert scale ``[E]`` (rank-1, applied
+        once on the way out).
+      policy / mu / interpret / backend / cache: as :func:`ternary_matmul`;
+        ``fixed:<dense>`` pins map through the dense kernel's grouped
+        variant so one policy string governs dense and MoE layers alike.
+
+    Returns ``[E, ..., N]`` in ``x``'s dtype (float in) or float32 (int8
+    in).  Selection is static-shape/trace-time, keyed on
+    ``(E, C, K, N, dtype, backend)``.
+    """
+    gw = _as_grouped_weight(w, scale, mu)
+    mu = mu or gw.mu
+    if x.ndim < 2 or x.shape[0] != gw.n_experts:
+        raise ValueError(
+            f"grouped activations must be [E, ..., K] with E="
+            f"{gw.n_experts}; got shape {x.shape}")
+    lead = x.shape[1:-1]
+    k = x.shape[-1]
+    if k != gw.in_features:
+        raise ValueError(f"x K={k} != weight K={gw.in_features}")
+    E, n = gw.n_experts, gw.out_features
+    x3 = x.reshape(E, -1, k)
+    c = int(np.prod(lead)) if lead else 1
+    act = _act_dtype_name(x)
+
+    spec = select_kernel(c, k, n, act, policy=policy, backend=backend,
+                         cache=cache, mu=mu, e=E)
+    if interpret is None:
+        interpret = _default_interpret()
+    y = spec.run(x3, gw, mu, interpret)
+    s = gw.scale if scale is None else scale
+    if s is not None:
+        s = jnp.asarray(s, jnp.float32)
+        y = y * (s.reshape(E, *([1] * (y.ndim - 1))) if s.ndim else s)
+    out_dtype = jnp.float32 if act == "int8" else x.dtype
+    return y.reshape(E, *lead, n).astype(out_dtype)
+
+
 # ---------------------------------------------------------------------------
 # Autotuning
 # ---------------------------------------------------------------------------
@@ -591,7 +877,7 @@ def autotune(m: int, k: int, n: int, act_dtype: str = "float32", *,
              kernels: list[str] | None = None, reps: int = 3, seed: int = 0,
              interpret: bool | None = None, backend: str | None = None,
              cache: AutotuneCache | None = None, save: bool = True,
-             mu: int = 3) -> dict[str, float]:
+             mu: int = 3, e: int | None = None) -> dict[str, float]:
     """Benchmark every eligible kernel on an ``[m,k]×[n,k]`` problem and
     record the wall-times (µs) in the autotune cache.
 
@@ -601,8 +887,13 @@ def autotune(m: int, k: int, n: int, act_dtype: str = "float32", *,
     measurement, exactly as ``layers.linear`` does — not from baked-in
     constants, which would bias selection against the in-kernel-decode paths.
 
+    Pass ``e`` to tune a grouped (batched-expert) problem: ``m`` is then the
+    per-expert capacity ``C``, operands are stacked ``[e, m, k]`` acts ×
+    ``[e, n, ceil(k/5)]`` packed, and only grouped kernels run.
+
     Returns ``{kernel_name: µs}``.  Subsequent ``policy="auto"`` dispatches
-    for the same ``(M, K, N, dtype, backend)`` use the measured best.
+    for the same ``(M, K, N, dtype, backend)`` (+ ``E`` if grouped) use the
+    measured best.
     """
     if reps < 1:
         raise ValueError(f"reps must be >= 1, got {reps}")
@@ -617,23 +908,25 @@ def autotune(m: int, k: int, n: int, act_dtype: str = "float32", *,
         interpret = _default_interpret()
     cache = cache or get_autotune_cache()
     rng = np.random.default_rng(seed)
+    lead = () if e is None else (e,)
     if act_dtype == "int8":
-        x = jnp.asarray(rng.integers(-127, 128, size=(m, k)), jnp.int8)
+        x = jnp.asarray(rng.integers(-127, 128, size=(*lead, m, k)), jnp.int8)
     else:
-        x = jnp.asarray(rng.normal(size=(m, k)), act_dtype)
+        x = jnp.asarray(rng.normal(size=(*lead, m, k)), act_dtype)
     packed = encoding.pack_base3(
-        jnp.asarray(rng.integers(-1, 2, size=(n, k)), jnp.int8))
+        jnp.asarray(rng.integers(-1, 2, size=(*lead, n, k)), jnp.int8))
 
-    names = kernels or [s.name for s in eligible_kernels(m, k, n, act_dtype)]
+    names = kernels or [s.name
+                        for s in eligible_kernels(m, k, n, act_dtype, e)]
     results: dict[str, float] = {}
     for name in names:
         spec = get_kernel(name)
-        if not spec.supports(m, k, n, act_dtype):
+        if not spec.supports(m, k, n, act_dtype, e):
             continue
 
         def call(xx, pk, run=spec.run):
-            return run(xx, TernaryWeight.from_packed(pk, 1.0, k, mu=mu),
-                       mu, interpret)
+            cls = TernaryWeight if e is None else GroupedTernaryWeight
+            return run(xx, cls.from_packed(pk, 1.0, k, mu=mu), mu, interpret)
 
         fn = jax.jit(call)
         try:
@@ -643,12 +936,13 @@ def autotune(m: int, k: int, n: int, act_dtype: str = "float32", *,
                 y = fn(x, packed)
             jax.block_until_ready(y)
             us = (time.perf_counter() - t0) / reps * 1e6
-        except Exception as e:  # pragma: no cover - kernel unavailable on backend
+        except Exception as exc:  # pragma: no cover - kernel unavailable on backend
+            tag = f"E{e} " if e is not None else ""
             warnings.warn(f"autotune: kernel {name!r} failed on "
-                          f"M{m} K{k} N{n} {act_dtype}/{backend}: {e}")
+                          f"{tag}M{m} K{k} N{n} {act_dtype}/{backend}: {exc}")
             continue
         results[name] = us
-        cache.record(m, k, n, act_dtype, backend, name, us, mu=mu)
+        cache.record(m, k, n, act_dtype, backend, name, us, mu=mu, e=e)
     if save and results:
         cache.save()
     return results

@@ -1,0 +1,158 @@
+"""Pallas TPU kernels: grouped (batched-expert) ternary matmuls.
+
+The MoE datapath the paper's bandwidth math requires: expert weights stay in
+HBM as stacked base-3 packed bytes ``[E, O, ceil(N/5)]`` (1.6 b/w) and every
+expert's tile is expanded to trits **in VMEM** right before its MXU
+contraction — the grid gains a leading expert dimension, so one kernel launch
+covers the whole expert stack without ever materializing a dense
+``[E, O, N]`` weight tensor.
+
+Two variants mirror the dense kernel family:
+
+  * :func:`grouped_packed_matmul` — float activations (bf16/f32 serving
+    path), f32 accumulation: the grouped analogue of
+    ``dequant_matmul.packed_matmul``;
+  * :func:`grouped_w2a8_matmul` — pre-quantized int8 activations, exact
+    int32 accumulation: the grouped analogue of ``w2a8_matmul`` (the paper's
+    Table-I W1.58A8 operating point, per expert).
+
+Per-expert absmean scales are a rank-1 correction applied by the caller on
+the way out (``y * scale[:, None, None]``), same convention as the dense
+kernels.  Decode-time expert capacity ``C`` is tiny (often 1), so the
+activation block is padded up — the launch stays profitable because the win
+is streamed weight bytes, not MACs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.encoding import TRITS_PER_BYTE
+from repro.kernels.dequant_matmul import _unpack_block
+
+
+def _grouped_kernel(acc_dtype):
+    def kernel(x_ref, p_ref, out_ref):
+        """x_ref [1, bc, bn]; p_ref [1, bo, bn//5]; out [1, bc, bo]."""
+        k = pl.program_id(3)
+        x = x_ref[0]
+        w = _unpack_block(p_ref[0], x.dtype)  # [bo, bn] trits in act dtype
+        partial = jax.lax.dot_general(
+            x, w, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=acc_dtype,
+        )
+
+        @pl.when(k == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        out_ref[0] += partial
+
+    return kernel
+
+
+def _pad_and_call(x, packed, *, block_c, block_o, block_n, interpret,
+                  acc_dtype):
+    """Shared pad-to-blocks + pallas_call for both grouped variants.
+
+    x: [E, C, N]; packed: [E, O, ceil(N/5)].  Returns [E, C, O] acc_dtype.
+    Padding follows the dense kernels' scheme: x columns zero-pad to the full
+    unpacked width (pad *bytes* decode to -1 trits but meet zero activations,
+    so products vanish); padded C/O rows are sliced off after the call.
+    """
+    E, C, N = x.shape
+    _, O, NB = packed.shape
+    full = NB * TRITS_PER_BYTE
+    if N < full:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, full - N)))
+    N = full
+    block_n = min(block_n, N)
+    block_n -= block_n % TRITS_PER_BYTE
+    block_c = min(block_c, C)
+    block_o = min(block_o, O)
+    pad_c, pad_o, pad_n = (-C) % block_c, (-O) % block_o, (-N) % block_n
+    if pad_c or pad_n:
+        x = jnp.pad(x, ((0, 0), (0, pad_c), (0, pad_n)))
+    if pad_o or pad_n:
+        packed = jnp.pad(packed,
+                         ((0, 0), (0, pad_o), (0, pad_n // TRITS_PER_BYTE)))
+    Cp, Op, Np = C + pad_c, O + pad_o, N + pad_n
+
+    out = pl.pallas_call(
+        _grouped_kernel(acc_dtype),
+        grid=(E, Cp // block_c, Op // block_o, Np // block_n),
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_n),
+                         lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, block_o, block_n // TRITS_PER_BYTE),
+                         lambda e, i, j, k: (e, j, k)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_o),
+                               lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, Cp, Op), acc_dtype),
+        interpret=interpret,
+    )(x, packed)
+    return out[:, :C, :O]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "block_c", "block_o", "block_n", "interpret"))
+def grouped_packed_matmul(
+    x: jax.Array,
+    packed: jax.Array,
+    n: int,
+    *,
+    block_c: int = 8,
+    block_o: int = 128,
+    block_n: int = 640,  # multiple of 5 (pack group) and 128 (lanes)
+    interpret: bool = True,
+) -> jax.Array:
+    """y[e, c, o] = Σ_n x[e, c, n] · unpack(packed[e])[o, n] (f32).
+
+    Args:
+      x:      [E, C, N] float activations (per-expert capacity rows).
+      packed: [E, O, ceil(N/5)] stacked base-3 packed ternary weights (the
+        byte dim may carry alignment padding past ``ceil(n/5)``).
+      n:      logical N (columns beyond n are zero by construction).
+    """
+    if x.shape[0] != packed.shape[0]:
+        raise ValueError(f"expert dims differ: x {x.shape} vs packed "
+                         f"{packed.shape}")
+    if x.shape[-1] < n or packed.shape[-1] * TRITS_PER_BYTE < n:
+        raise ValueError((x.shape, packed.shape, n))
+    return _pad_and_call(x, packed, block_c=block_c, block_o=block_o,
+                         block_n=block_n, interpret=interpret,
+                         acc_dtype=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "block_c", "block_o", "block_n", "interpret"))
+def grouped_w2a8_matmul(
+    x_q: jax.Array,
+    packed: jax.Array,
+    n: int,
+    *,
+    block_c: int = 8,
+    block_o: int = 128,
+    block_n: int = 640,
+    interpret: bool = True,
+) -> jax.Array:
+    """Exact int32 y[e, c, o] = Σ_n x_q[e, c, n] · trits(packed[e])[o, n].
+
+    x_q: [E, C, N] int8 (per-token quantized activations, routed per expert).
+    packed: [E, O, ceil(N/5)] stacked base-3 ternary weights.
+    """
+    if x_q.shape[0] != packed.shape[0]:
+        raise ValueError(f"expert dims differ: x {x_q.shape} vs packed "
+                         f"{packed.shape}")
+    if x_q.shape[-1] < n or packed.shape[-1] * TRITS_PER_BYTE < n:
+        raise ValueError((x_q.shape, packed.shape, n))
+    return _pad_and_call(x_q, packed, block_c=block_c, block_o=block_o,
+                         block_n=block_n, interpret=interpret,
+                         acc_dtype=jnp.int32)

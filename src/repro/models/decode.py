@@ -25,6 +25,7 @@ multiples compile one trace total) — see :mod:`repro.serving.scheduler`.
 
 from __future__ import annotations
 
+import logging
 from typing import Any
 
 import jax
@@ -38,6 +39,7 @@ from repro.models.layers import (
     attention,
     ffn,
     linear,
+    moe_capacity,
     moe_ffn,
     rms_norm,
 )
@@ -49,6 +51,8 @@ from repro.models.model import (
     sinusoidal_position_at,
     sinusoidal_positions,
 )
+
+logger = logging.getLogger(__name__)
 
 #: leaf-dict keys (within their parent block) that carry ternary weights
 TERNARY_KEYS = {"wq", "wk", "wv", "wo", "wi", "wg", "up", "down", "wz", "wx",
@@ -143,6 +147,25 @@ def layer_matmul_shapes(cfg: ModelConfig, batch_size: int,
         proj(d, 2 * up)            # sLSTM ffn_up
         proj(up, d)                # sLSTM ffn_down
     return sorted(shapes)
+
+
+def layer_grouped_matmul_shapes(cfg: ModelConfig, batch_size: int,
+                                seq_len: int = 1
+                                ) -> list[tuple[int, int, int, int]]:
+    """The distinct grouped ternary-matmul problems ``(E, C, K, N)`` one
+    forward step issues through
+    :func:`repro.kernels.dispatch.grouped_ternary_matmul` — the MoE expert
+    stacks (``wi``/``wg``: ``K = d_model``, ``N = d_ff``; ``wo`` reversed)
+    at the step's per-expert capacity.  Decode capacity is tiny (often 1),
+    which is exactly the weight-bandwidth-bound operating point the grouped
+    packed kernels exist for.  Empty for non-MoE configs.
+    """
+    if not cfg.n_experts:
+        return []
+    E = cfg.n_experts
+    cap = moe_capacity(cfg, batch_size * seq_len)
+    d, f = cfg.d_model, cfg.d_ff
+    return sorted({(E, cap, d, f), (E, cap, f, d)})
 
 
 def packed_bits_per_weight(p: Params) -> float:
@@ -443,11 +466,30 @@ def supports_chunked_prefill(p: Params, cfg: ModelConfig) -> bool:
     The chunk-scan path needs a uniform stack of attention blocks whose only
     cross-chunk state is the KV ring: plain ``attn`` stacks (incl. uniform
     MoE) qualify; encoder-decoder, modality frontends, interleaved-MoE
-    (``dense_blocks``), and recurrent-state families (zamba2/xlstm, whose
-    conv/SSM states would absorb chunk padding) fall back to whole-prompt
-    prefill."""
-    return (cfg.block_pattern == "attn" and not cfg.is_encdec
-            and cfg.frontend == "none" and "dense_blocks" not in p)
+    (``dense_blocks``, e.g. llama4), and recurrent-state families
+    (zamba2/xlstm, whose conv/SSM states would absorb chunk padding) fall
+    back to whole-prompt admission via :func:`prefill_into_slot` — which
+    retraces per prompt length (see ROADMAP "Continuous-batching
+    follow-ups").  Each fallback logs its reason at DEBUG on
+    ``repro.models.decode`` so the per-length-retrace tax is attributable.
+    """
+    reason = None
+    if cfg.block_pattern != "attn":
+        reason = (f"block_pattern={cfg.block_pattern!r} carries recurrent "
+                  "conv/SSM chunk state")
+    elif cfg.is_encdec:
+        reason = "encoder-decoder stacks prefill the encoder whole"
+    elif cfg.frontend != "none":
+        reason = f"modality frontend {cfg.frontend!r} feeds prefix embeds"
+    elif "dense_blocks" in p:
+        reason = "interleaved-MoE (dense_blocks) stack is not a uniform scan"
+    if reason is not None:
+        logger.debug(
+            "chunked prefill unsupported for %s: %s; admission falls back "
+            "to whole-prompt prefill_into_slot (one jit trace per prompt "
+            "length)", cfg.name, reason)
+        return False
+    return True
 
 
 def prefill_chunk(p: Params, cfg: ModelConfig, cache: dict,

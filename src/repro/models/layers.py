@@ -19,7 +19,6 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import encoding
 from repro.core.quantization import fake_quant_acts, fake_quant_ternary
 from repro.models.config import ModelConfig
 
@@ -351,6 +350,16 @@ def ffn(p: Params, x: jax.Array, cfg: ModelConfig):
     return linear(p["wo"], h, cfg)
 
 
+def moe_capacity(cfg: ModelConfig, tokens: int) -> int:
+    """Per-expert capacity ``C`` for a forward over ``tokens`` tokens — the
+    static expert-buffer row count :func:`moe_ffn` allocates.  The single
+    source of truth: the autotune shape universe
+    (:func:`repro.models.decode.layer_grouped_matmul_shapes`) must enumerate
+    exactly the capacities the forward dispatches."""
+    return max(int(cfg.capacity_factor * tokens * cfg.experts_per_token
+                   / cfg.n_experts), 1)
+
+
 def init_moe(key, cfg: ModelConfig, *, stack=()) -> Params:
     ks = jax.random.split(key, 5)
     E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
@@ -376,16 +385,24 @@ def _maybe_quant_expert(w, cfg: ModelConfig):
 
 def _expert_matmul(leaf: Params, cfg: ModelConfig, d_in: int):
     """Returns f: [E, C, d_in] → [E, C, d_out] for train ({"w"}) or packed
-    ({"packed" [E, d_out, d_in/5], "scale" [E]}) expert weights."""
+    ({"packed" [E, d_out, d_in/5], "scale" [E]}) expert weights.
+
+    The packed (serving) path goes through the unified dispatch layer's
+    grouped entry point, so the expert stack streams as base-3 packed bytes
+    end-to-end — never a dense ``[E, d_out, d_in]`` HBM temporary — and the
+    serving policy (``cfg.matmul_policy`` / ``$REPRO_TERNARY_POLICY``)
+    governs MoE matmuls exactly like the dense projections (``fixed:<dense>``
+    pins resolve to the kernel's grouped variant).  The QAT/train path keeps
+    the straight-through einsum over fake-quant master weights.
+    """
     if "packed" in leaf:
-        w_t = encoding.unpack_base3(leaf["packed"], d_in)  # [E, d_out, d_in]
-        scale = leaf["scale"]
+        from repro.kernels.dispatch import (GroupedTernaryWeight,
+                                            grouped_ternary_matmul)
 
-        def f(t):
-            y = jnp.einsum("ecd,efd->ecf", t, w_t.astype(t.dtype))
-            return y * scale[:, None, None].astype(y.dtype)
-
-        return f
+        gw = GroupedTernaryWeight.from_packed(leaf["packed"], leaf["scale"],
+                                              d_in, mu=cfg.mu)
+        return lambda t: grouped_ternary_matmul(t, gw,
+                                                policy=cfg.matmul_policy)
     w = _maybe_quant_expert(leaf["w"], cfg)
     return lambda t: jnp.einsum("ecd,edf->ecf", t, w.astype(t.dtype))
 
@@ -420,7 +437,7 @@ def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig):
     ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(1.0) / (T * K)
     aux = E * jnp.sum(me * ce)
 
-    cap = max(int(cfg.capacity_factor * T * K / E), 1)
+    cap = moe_capacity(cfg, T)
     flat_e = gate_idx.reshape(T * K)                                # [TK]
     order = jnp.argsort(flat_e, stable=True)                        # [TK]
     sorted_e = flat_e[order]

@@ -143,39 +143,49 @@ class DecodeEngine:
         return wrapped
 
     def matmul_shape_universe(self, *, include_prefill: bool = True
-                              ) -> list[tuple[int, int, int]]:
-        """Every ternary-matmul ``(M, K, N)`` this engine's steady-state
-        serving paths dispatch: decode (``M = B``) plus, with
-        ``include_prefill``, the admission-chunk bucket shape (``M = 1 ·
-        chunk`` — requests are prefilled one at a time, chunk by chunk).
-        Generational ``run()`` prefills at ``M = B · prompt_len`` for
-        whatever prompt lengths arrive; those are workload-dependent and
-        belong to ``benchmarks/autotune_sweep.py``, not the engine's fixed
-        universe."""
-        from repro.models.decode import layer_matmul_shapes
+                              ) -> list[tuple[int, ...]]:
+        """Every ternary-matmul problem this engine's steady-state serving
+        paths dispatch: dense ``(M, K, N)`` triples — decode (``M = B``)
+        plus, with ``include_prefill``, the admission-chunk bucket shape
+        (``M = 1 · chunk`` — requests are prefilled one at a time, chunk by
+        chunk) — and, for MoE configs, grouped ``(E, C, K, N)`` quads at the
+        matching per-expert capacities (the expert stacks dispatch through
+        ``grouped_ternary_matmul``).  Generational ``run()`` prefills at
+        ``M = B · prompt_len`` for whatever prompt lengths arrive; those are
+        workload-dependent and belong to ``benchmarks/autotune_sweep.py``,
+        not the engine's fixed universe."""
+        from repro.models.decode import (layer_grouped_matmul_shapes,
+                                         layer_matmul_shapes)
 
         shapes = set(layer_matmul_shapes(self.cfg, self.B))
+        shapes |= set(layer_grouped_matmul_shapes(self.cfg, self.B))
         if include_prefill:
             shapes |= set(layer_matmul_shapes(self.cfg, 1,
                                               seq_len=self.prefill_chunk))
+            shapes |= set(layer_grouped_matmul_shapes(
+                self.cfg, 1, seq_len=self.prefill_chunk))
         return sorted(shapes)
 
     def autotune_shapes(self, *, include_prefill: bool = True,
                         **autotune_kw) -> dict:
         """Populate the dispatch autotune cache for this engine's per-step
         matmul shapes — decode *and* (by default) the prefill bucket shapes,
-        so ``policy="auto"`` admission dispatches on measurements instead of
-        always falling back to the analytical prior.  Call before the first
-        `run`/`serve`."""
+        dense and grouped-expert alike, so ``policy="auto"`` serving
+        dispatches on measurements instead of always falling back to the
+        analytical prior.  Call before the first `run`/`serve`."""
         from repro.kernels.dispatch import autotune, get_autotune_cache
 
         cache = get_autotune_cache()
         results = {}
-        for (m, k, n) in self.matmul_shape_universe(
+        for shape in self.matmul_shape_universe(
                 include_prefill=include_prefill):
-            results[(m, k, n)] = autotune(m, k, n, self.cfg.dtype,
-                                          mu=self.cfg.mu, cache=cache,
-                                          save=False, **autotune_kw)
+            if len(shape) == 4:       # grouped expert stack (E, C, K, N)
+                e, m, k, n = shape
+            else:
+                (m, k, n), e = shape, None
+            results[shape] = autotune(m, k, n, self.cfg.dtype,
+                                      mu=self.cfg.mu, cache=cache,
+                                      save=False, e=e, **autotune_kw)
         cache.save()  # one write for the whole shape set
         return results
 

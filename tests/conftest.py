@@ -47,6 +47,31 @@ def key():
     return jax.random.PRNGKey(0)
 
 
+@pytest.fixture(scope="session")
+def jaxpr_shape_walker():
+    """Recursive jaxpr scanner: returns ``walk(jaxpr, shapes) -> [(prim,
+    shape), ...]`` listing every equation output (descending into
+    scan/jit/cond sub-jaxprs) whose aval shape is in ``shapes``.  The shared
+    memory oracle for "this dense intermediate must never materialize"
+    assertions (dispatch + MoE tests)."""
+
+    def walk(jaxpr, shapes, found=None):
+        found = [] if found is None else found
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and tuple(aval.shape) in shapes:
+                    found.append((eqn.primitive.name, tuple(aval.shape)))
+            for sub in eqn.params.values():
+                subs = sub if isinstance(sub, (list, tuple)) else [sub]
+                for s in subs:
+                    if hasattr(s, "jaxpr"):
+                        walk(s.jaxpr, shapes, found)
+        return found
+
+    return walk
+
+
 @pytest.fixture()
 def tmp_autotune_cache(tmp_path, monkeypatch):
     """Point the dispatch autotune cache at a throwaway file."""

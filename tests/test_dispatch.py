@@ -21,8 +21,12 @@ from repro.kernels import dispatch as dp
 from repro.kernels import ref as ref_oracle
 
 KERNELS = sorted(dp.kernel_names())
+GROUPED_KERNELS = sorted(n for n in KERNELS if dp.get_kernel(n).grouped)
+DENSE_KERNELS = sorted(n for n in KERNELS if not dp.get_kernel(n).grouped)
 DTYPES = ["float32", "bfloat16", "float16", "int8"]
 SHAPES = [(1, 15, 9), (4, 64, 32), (8, 60, 33)]
+#: grouped problems (E, C, K, N): decode-like C=1, ragged dims, byte-aligned
+GROUPED_SHAPES = [(2, 1, 15, 9), (4, 3, 64, 32), (3, 8, 60, 33)]
 #: int8 activations: every path accumulates exactly (int32 or f32 on small
 #: ints) → bit-exact.  Float paths differ only by output-cast rounding.
 TOL = {
@@ -106,6 +110,94 @@ def test_weight_container_roundtrips():
 
 
 # ---------------------------------------------------------------------------
+# grouped (batched-expert) differential matrix: every grouped kernel ≡
+# per-expert ref, with per-expert scales
+# ---------------------------------------------------------------------------
+
+
+def _grouped_problem(e, c, k, n, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    w_t = jnp.asarray(rng.integers(-1, 2, size=(e, n, k)), jnp.int8)
+    scale = jnp.asarray(rng.uniform(0.5, 1.5, size=(e,)), jnp.float32)
+    if dtype == "int8":
+        x = jnp.asarray(rng.integers(-127, 128, size=(e, c, k)), jnp.int8)
+    else:
+        x = jnp.asarray(rng.normal(size=(e, c, k)), dtype)
+    gw = dp.GroupedTernaryWeight.from_ternary(w_t, scale)
+    ref = np.stack([
+        np.asarray(ref_oracle.signflip_matmul_ref(
+            x[i].astype(jnp.float32), w_t[i])) * float(scale[i])
+        for i in range(e)])
+    return x, gw, ref
+
+
+@pytest.mark.parametrize("e,c,k,n", GROUPED_SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("kernel", GROUPED_KERNELS)
+def test_grouped_kernel_matches_per_expert_ref(kernel, dtype, e, c, k, n):
+    spec = dp.get_kernel(kernel)
+    if not spec.supports(c, k, n, dtype, e):
+        pytest.skip(f"{kernel} does not support {dtype}")
+    x, gw, ref = _grouped_problem(e, c, k, n, dtype)
+    y = np.asarray(dp.grouped_ternary_matmul(x, gw, policy=f"fixed:{kernel}"),
+                   np.float32)
+    np.testing.assert_allclose(y, ref, **TOL[dtype])
+
+
+def test_grouped_weight_container_roundtrips():
+    x, gw, ref = _grouped_problem(3, 2, 25, 11, "float32")
+    gw2 = dp.GroupedTernaryWeight.from_packed(gw.packed(), gw.scale,
+                                              gw.in_features)
+    assert np.array_equal(np.asarray(gw2.trits()), np.asarray(gw.trits()))
+    y = dp.grouped_ternary_matmul(x, gw2, policy="fixed:grouped_dequant")
+    np.testing.assert_allclose(np.asarray(y), ref, **TOL["float32"])
+
+
+def test_grouped_accepts_padded_packed_bytes():
+    """The serving artifact pads the packed byte dim (TP shardability);
+    every grouped kernel must slice the decode at the logical K."""
+    x, gw, ref = _grouped_problem(2, 3, 23, 17, "float32")
+    packed = gw.packed()
+    pad = (-packed.shape[-1]) % 8
+    packed = jnp.pad(packed, ((0, 0), (0, 0), (0, pad)))
+    gw2 = dp.GroupedTernaryWeight.from_packed(packed, gw.scale,
+                                              gw.in_features)
+    for kernel in ("grouped_ref", "grouped_dequant"):
+        y = dp.grouped_ternary_matmul(x, gw2, policy=f"fixed:{kernel}")
+        np.testing.assert_allclose(np.asarray(y), ref, **TOL["float32"])
+
+
+def test_grouped_dispatch_under_jit_matches_eager():
+    """Stacked packed weights arriving as jit arguments (the MoE serving
+    path) must not leak tracers through the lazy encoding cache."""
+    x, gw, ref = _grouped_problem(4, 2, 40, 21, "float32")
+    packed, scale, k = gw.packed(), gw.scale, gw.in_features
+
+    @jax.jit
+    def f(xx, pk):
+        w = dp.GroupedTernaryWeight.from_packed(pk, scale, k)
+        return dp.grouped_ternary_matmul(xx, w, policy="fixed:grouped_ref")
+
+    np.testing.assert_allclose(np.asarray(f(x, packed)), ref,
+                               **TOL["float32"])
+
+
+def test_grouped_no_dense_stack_in_jaxpr(jaxpr_shape_walker):
+    """The packed grouped paths must never materialize the dense [E, N, K]
+    expert stack — the whole point of streaming 1.6 b/w weights."""
+    x, gw, ref = _grouped_problem(4, 2, 40, 24, "float32")
+    packed, scale, k = gw.packed(), gw.scale, gw.in_features
+    E, N = gw.n_experts, gw.out_features
+
+    for kernel in ("grouped_ref", "grouped_dequant"):
+        jaxpr = jax.make_jaxpr(
+            lambda xx, pk: dp.grouped_ternary_matmul(
+                xx, dp.GroupedTernaryWeight.from_packed(pk, scale, k),
+                policy=f"fixed:{kernel}"))(x, packed)
+        assert jaxpr_shape_walker(jaxpr.jaxpr, {(E, N, k)}) == [], kernel
+
+
+# ---------------------------------------------------------------------------
 # selection properties
 # ---------------------------------------------------------------------------
 
@@ -168,6 +260,99 @@ def test_env_var_policy(monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# grouped selection properties
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_and_dense_kernels_never_cross_eligible():
+    for name in DENSE_KERNELS:
+        assert not dp.get_kernel(name).supports(4, 32, 16, "float32", 8)
+    for name in GROUPED_KERNELS:
+        assert not dp.get_kernel(name).supports(4, 32, 16, "float32")
+    assert {s.name for s in dp.eligible_kernels(4, 32, 16, "float32", 8)} \
+        <= set(GROUPED_KERNELS)
+
+
+@pytest.mark.parametrize("policy", ["auto", "prior"])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_grouped_selection_always_valid(policy, dtype):
+    empty = dp.AutotuneCache(path="/nonexistent/autotune.json")
+    for backend in ("cpu", "tpu", "gpu"):
+        spec = dp.select_kernel(1, 64, 48, dtype, policy=policy,
+                                backend=backend, cache=empty, e=16)
+        assert spec.grouped
+        assert spec.supports(1, 64, 48, dtype, 16)
+
+
+def test_fixed_dense_pin_maps_to_grouped_variant():
+    """One policy string governs dense AND MoE layers: fixed:<dense kernel>
+    resolves to its grouped analogue on grouped problems."""
+    for dense, grouped in [("ref", "grouped_ref"),
+                           ("dequant_packed", "grouped_dequant")]:
+        spec = dp.select_kernel(2, 30, 20, "float32",
+                                policy=f"fixed:{dense}", e=4)
+        assert spec.name == grouped
+    spec = dp.select_kernel(2, 30, 20, "int8", policy="fixed:w2a8", e=4)
+    assert spec.name == "grouped_w2a8"
+    # pinning a grouped kernel works directly on grouped problems ...
+    assert dp.select_kernel(2, 30, 20, "float32",
+                            policy="fixed:grouped_ref", e=4).name == "grouped_ref"
+    # ... and kernels without a grouped analogue refuse MoE problems loudly
+    with pytest.raises(ValueError, match="no grouped"):
+        dp.select_kernel(2, 30, 20, "float32", policy="fixed:lut_onehot", e=4)
+    # a grouped pin cannot serve a dense problem
+    with pytest.raises(ValueError, match="does not support"):
+        dp.select_kernel(2, 30, 20, "float32", policy="fixed:grouped_ref")
+
+
+def test_grouped_prior_tracks_decode_bandwidth_regime():
+    """Decode-time capacity C is tiny, so the grouped prior must be
+    dominated by weight bytes streamed: the 1.6 b/w packed grouped kernels
+    beat the dense-decoding grouped_ref on hardware at C=1, and grouped_ref
+    (non-Pallas) wins on CPU where Pallas kernels are interpreted."""
+    dec = functools.partial(dp.static_prior, m=1, k=4096, n=6400,
+                            act_dtype="bfloat16", backend="tpu", e=16)
+    assert dec(dp.get_kernel("grouped_dequant")) < dec(dp.get_kernel("grouped_ref"))
+    on_cpu = dp.select_kernel(1, 4096, 6400, "bfloat16", policy="prior",
+                              backend="cpu", e=16)
+    assert on_cpu.name == "grouped_ref"
+    # the prior scales with the expert count: every expert's weights stream
+    one = dp.static_prior(dp.get_kernel("grouped_dequant"), 1, 64, 48,
+                          "bfloat16", "tpu", 3, 2)
+    many = dp.static_prior(dp.get_kernel("grouped_dequant"), 1, 64, 48,
+                           "bfloat16", "tpu", 3, 16)
+    assert many == pytest.approx(8 * one)
+
+
+def test_grouped_autotune_cache_key_isolated_from_dense(tmp_autotune_cache):
+    """A grouped measurement must steer only grouped problems of the same
+    expert count — never the dense problem with matching (M, K, N)."""
+    cache = dp.get_autotune_cache()
+    cache.record(2, 20, 9, "float32", "cpu", "grouped_dequant", 1.0, e=4)
+    cache.record(2, 20, 9, "float32", "cpu", "ref", 5.0)
+    assert cache.best(2, 20, 9, "float32", "cpu", e=4) == "grouped_dequant"
+    assert cache.best(2, 20, 9, "float32", "cpu") == "ref"
+    assert cache.best(2, 20, 9, "float32", "cpu", e=8) is None
+    spec = dp.select_kernel(2, 20, 9, "float32", policy="auto",
+                            backend="cpu", cache=cache, e=4)
+    assert spec.name == "grouped_dequant"
+
+
+def test_grouped_autotune_measures_and_dispatch_uses_it(tmp_autotune_cache):
+    timings = dp.autotune(2, 20, 9, "float32", e=3, reps=1,
+                          kernels=["grouped_ref", "grouped_dequant"])
+    assert set(timings) == {"grouped_ref", "grouped_dequant"}
+    assert all(t > 0 for t in timings.values())
+    best = min(timings, key=timings.get)
+    assert dp.select_kernel(2, 20, 9, "float32", policy="auto",
+                            e=3).name == best
+    # survives a cold reload under the grouped key
+    dp.reset_autotune_cache()
+    assert dp.select_kernel(2, 20, 9, "float32", policy="auto",
+                            e=3).name == best
+
+
+# ---------------------------------------------------------------------------
 # autotune cache
 # ---------------------------------------------------------------------------
 
@@ -204,6 +389,50 @@ def test_corrupt_cache_file_is_ignored(tmp_autotune_cache):
     tmp_autotune_cache.write_text("{not json")
     cache = dp.AutotuneCache.load(str(tmp_autotune_cache))
     assert len(cache) == 0
+
+
+def test_cache_schema_v2_and_v1_compat(tmp_autotune_cache):
+    import json as _json
+
+    cache = dp.get_autotune_cache()
+    cache.record(4, 32, 16, "float32", "cpu", "ref", 9.0)
+    cache.record(2, 32, 16, "float32", "cpu", "grouped_ref", 3.0, e=8)
+    cache.save()
+    doc = _json.loads(tmp_autotune_cache.read_text())
+    assert doc["schema_version"] == dp.CACHE_SCHEMA_VERSION == 2
+    assert "E8:M2:K32:N16:mu3:float32:cpu" in doc["entries"]
+    # a v1 file (dense-only keys, unchanged format) still loads
+    tmp_autotune_cache.write_text(_json.dumps(
+        {"schema_version": 1,
+         "entries": {"M4:K32:N16:mu3:float32:cpu": {"ref": 7.5}}}))
+    old = dp.AutotuneCache.load(str(tmp_autotune_cache))
+    assert old.best(4, 32, 16, "float32", "cpu") == "ref"
+    # unknown future schemas are ignored, not misread
+    tmp_autotune_cache.write_text(_json.dumps(
+        {"schema_version": 99, "entries": {"M1:K1:N1:mu3:float32:cpu": {}}}))
+    assert len(dp.AutotuneCache.load(str(tmp_autotune_cache))) == 0
+
+
+def test_cache_save_is_atomic(tmp_autotune_cache):
+    """A mid-write kill (stale temp debris) or concurrent writer never
+    corrupts the cache: writes go to a unique temp + os.replace, so readers
+    always see a complete JSON document."""
+    cache = dp.get_autotune_cache()
+    cache.record(4, 32, 16, "float32", "cpu", "ref", 9.0)
+    cache.save()
+    # debris from a killed writer in the same directory is inert
+    (tmp_autotune_cache.parent / ".autotune-dead.tmp").write_text("{trunc")
+    # a concurrent writer with different entries replaces wholesale
+    other = dp.AutotuneCache.load(str(tmp_autotune_cache))
+    other.record(8, 64, 32, "float32", "cpu", "signflip", 1.0)
+    other.save()
+    reloaded = dp.AutotuneCache.load(str(tmp_autotune_cache))
+    assert reloaded.best(4, 32, 16, "float32", "cpu") == "ref"
+    assert reloaded.best(8, 64, 32, "float32", "cpu") == "signflip"
+    # no temp files accumulate from successful saves
+    tmps = [p for p in tmp_autotune_cache.parent.iterdir()
+            if p.name.endswith(".tmp") and p.name != ".autotune-dead.tmp"]
+    assert tmps == []
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,269 @@
+"""MoE expert matmuls through the grouped dispatch layer.
+
+Differential oracle: ``moe_ffn`` with packed expert weights now routes
+through ``repro.kernels.dispatch.grouped_ternary_matmul`` — its output must
+match the pre-dispatch eager-einsum path (full stacked dequant + einsum)
+bit-for-bit up to bf16 output rounding, across routing and capacity
+dropping, because the rewire changed only the *kernel*, never the math.
+
+Memory oracle: the packed path must never materialize the dense
+``[E, d_out, d_in]`` expert stack (asserted on the jaxpr, recursively
+through scan/jit bodies) — that full-dequant temporary every step was
+exactly the bandwidth bug this kernel family removes.
+
+Plus: the engine's grouped autotune warm-up, dispatch-policy governance of
+MoE (pins, shape-universe coverage), and the chunked-prefill fallback debug
+log for interleaved-MoE stacks.
+"""
+
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.layers as layers_mod
+from repro.core import encoding
+from repro.kernels import dispatch as dp
+from repro.models.layers import moe_ffn
+
+
+def _moe_cfg(**overrides):
+    from repro.configs.registry import get_smoke_config
+
+    return get_smoke_config("phi3.5-moe-42b-a6.6b", **overrides)
+
+
+@pytest.fixture(scope="module")
+def packed_moe_model():
+    from repro.models.decode import quantize_for_serving
+    from repro.models.model import init_params
+
+    cfg = _moe_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params, quantize_for_serving(params, cfg)
+
+
+def _moe_block(sp):
+    """Layer-0 slice of the stacked MoE block (what the scan feeds a layer)."""
+    return jax.tree.map(lambda t: t[0], sp["blocks"])["moe"]
+
+
+_DISPATCH_EXPERT_MATMUL = layers_mod._expert_matmul  # pre-monkeypatch binding
+
+
+def _einsum_reference_expert_matmul(leaf, cfg, d_in):
+    """The pre-dispatch packed path: eager full-stack dequant + one einsum.
+
+    Kept verbatim as the differential oracle for the grouped kernels."""
+    if "packed" in leaf:
+        w_t = encoding.unpack_base3(leaf["packed"], d_in)  # [E, dout, din]
+        scale = leaf["scale"]
+
+        def f(t):
+            y = jnp.einsum("ecd,efd->ecf", t, w_t.astype(t.dtype))
+            return y * scale[:, None, None].astype(y.dtype)
+
+        return f
+    return _DISPATCH_EXPERT_MATMUL(leaf, cfg, d_in)
+
+
+# ---------------------------------------------------------------------------
+# differential: moe_ffn through dispatch ≡ eager einsum path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("capacity_factor", [1.25, 0.25])
+def test_packed_moe_ffn_matches_einsum_path(packed_moe_model, monkeypatch,
+                                            capacity_factor):
+    """Routing, gating, capacity dropping and the expert matmuls must be
+    unchanged by the dispatch rewire — including when the tiny capacity
+    factor forces token drops."""
+    cfg, _, sp = packed_moe_model
+    cfg = cfg.with_(capacity_factor=capacity_factor)
+    moe = _moe_block(sp)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, cfg.d_model),
+                          jnp.bfloat16)
+    out, aux = moe_ffn(moe, x, cfg)
+
+    monkeypatch.setattr(layers_mod, "_expert_matmul",
+                        _einsum_reference_expert_matmul)
+    out_ref, aux_ref = moe_ffn(moe, x, cfg)
+    # identical routing → identical aux loss; outputs agree to bf16 rounding
+    np.testing.assert_allclose(float(aux), float(aux_ref), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(out_ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_qat_moe_ffn_unchanged_by_dispatch(packed_moe_model, monkeypatch):
+    """The QAT/train path (dense fake-quant master weights) does not route
+    through dispatch — the reference monkeypatch is a no-op there."""
+    cfg, params, _ = packed_moe_model
+    moe = _moe_block(params)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 4, cfg.d_model),
+                          jnp.bfloat16)
+    out, aux = moe_ffn(moe, x, cfg)
+    monkeypatch.setattr(layers_mod, "_expert_matmul",
+                        _einsum_reference_expert_matmul)
+    out_ref, aux_ref = moe_ffn(moe, x, cfg)
+    assert np.array_equal(np.asarray(out, np.float32),
+                          np.asarray(out_ref, np.float32))
+    assert float(aux) == float(aux_ref)
+
+
+def test_packed_moe_policy_pins_govern_experts(packed_moe_model):
+    """fixed:<dense kernel> pins resolve through the grouped variants for
+    the expert stacks: ref and dequant_packed agree; LUT pins (no grouped
+    analogue) refuse MoE configs loudly."""
+    cfg, _, sp = packed_moe_model
+    moe = _moe_block(sp)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 6, cfg.d_model),
+                          jnp.bfloat16)
+    y_ref, _ = moe_ffn(moe, x, cfg.with_(matmul_policy="fixed:ref"))
+    y_deq, _ = moe_ffn(moe, x, cfg.with_(matmul_policy="fixed:dequant_packed"))
+    np.testing.assert_allclose(np.asarray(y_ref, np.float32),
+                               np.asarray(y_deq, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    with pytest.raises(ValueError, match="no grouped"):
+        moe_ffn(moe, x, cfg.with_(matmul_policy="fixed:lut_onehot"))
+
+
+# ---------------------------------------------------------------------------
+# memory: no [E, d_out, d_in] dense intermediate on the packed path
+# ---------------------------------------------------------------------------
+
+
+def test_packed_moe_ffn_never_materializes_dense_expert_stack(
+        packed_moe_model, jaxpr_shape_walker):
+    cfg, _, sp = packed_moe_model
+    moe = _moe_block(sp)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    dense_stacks = {(E, f, d), (E, d, f)}
+    x = jnp.zeros((2, 4, d), jnp.bfloat16)
+    jaxpr = jax.make_jaxpr(lambda p, xx: moe_ffn(p, xx, cfg))(moe, x)
+    found = jaxpr_shape_walker(jaxpr.jaxpr, dense_stacks)
+    assert found == [], (
+        f"packed moe_ffn materialized dense expert stacks: {found}")
+
+
+def test_dense_stack_detector_catches_the_old_path(packed_moe_model,
+                                                   monkeypatch,
+                                                   jaxpr_shape_walker):
+    """Guard the guard: the jaxpr walker must FIND the dense stack in the
+    pre-dispatch eager-einsum path, or the assertion above proves nothing."""
+    cfg, _, sp = packed_moe_model
+    moe = _moe_block(sp)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    monkeypatch.setattr(layers_mod, "_expert_matmul",
+                        _einsum_reference_expert_matmul)
+    x = jnp.zeros((2, 4, d), jnp.bfloat16)
+    jaxpr = jax.make_jaxpr(lambda p, xx: moe_ffn(p, xx, cfg))(moe, x)
+    found = jaxpr_shape_walker(jaxpr.jaxpr, {(E, f, d), (E, d, f)})
+    assert found, "walker failed to detect the eager full-dequant einsum path"
+
+
+# ---------------------------------------------------------------------------
+# engine integration: shape universe, autotune warm-up, end-to-end decode
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_shapes_cover_real_moe_dispatch(packed_moe_model, monkeypatch):
+    """Drift guard (MoE analogue of the dense test in test_dispatch): every
+    grouped problem a serving step dispatches must be enumerated by
+    layer_grouped_matmul_shapes."""
+    from repro.models.decode import (decode_step, init_cache,
+                                     layer_grouped_matmul_shapes)
+
+    cfg, _, sp = packed_moe_model
+    B = 2
+    seen: set[tuple[int, int, int, int]] = set()
+    orig = dp.select_kernel
+
+    def spy(m, k, n, act_dtype, **kw):
+        if kw.get("e") is not None:
+            seen.add((kw["e"], m, k, n))
+        return orig(m, k, n, act_dtype, **kw)
+
+    monkeypatch.setattr(dp, "select_kernel", spy)
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, 16))
+    jax.eval_shape(
+        lambda p, c: decode_step(p, cfg, c, jnp.zeros((B,), jnp.int32),
+                                 jnp.zeros((B,), jnp.int32)), sp, cache)
+    assert seen, "decode dispatched no grouped ternary matmuls"
+    assert seen <= set(layer_grouped_matmul_shapes(cfg, B))
+
+
+def test_moe_engine_autotune_covers_grouped_shapes(packed_moe_model,
+                                                   tmp_autotune_cache):
+    from repro.models.decode import (layer_grouped_matmul_shapes,
+                                     layer_matmul_shapes)
+    from repro.serving.engine import DecodeEngine
+
+    cfg, _, sp = packed_moe_model
+    eng = DecodeEngine(sp, cfg, batch_size=2, max_len=32, prefill_chunk=8)
+    results = eng.autotune_shapes(reps=1,
+                                  kernels=["ref", "signflip", "grouped_ref"])
+    want = set(layer_matmul_shapes(cfg, 2))
+    want |= set(layer_matmul_shapes(cfg, 1, seq_len=8))
+    want |= set(layer_grouped_matmul_shapes(cfg, 2))
+    want |= set(layer_grouped_matmul_shapes(cfg, 1, seq_len=8))
+    assert sorted(results) == sorted(want)
+    assert sorted(results) == eng.matmul_shape_universe()
+    cache = dp.get_autotune_cache()
+    backend = jax.default_backend()
+    for shape in results:
+        if len(shape) == 4:
+            e, c, k, n = shape
+            assert cache.best(c, k, n, cfg.dtype, backend, e=e) is not None
+        else:
+            m, k, n = shape
+            assert cache.best(m, k, n, cfg.dtype, backend) is not None
+
+
+def test_moe_engine_end_to_end(packed_moe_model, tmp_autotune_cache):
+    from repro.serving.engine import DecodeEngine, Request
+
+    cfg, _, sp = packed_moe_model
+    eng = DecodeEngine(sp, cfg, batch_size=2, max_len=32,
+                       matmul_policy="auto")
+    reqs = eng.run([Request(prompt=[3, 4, 5], max_new_tokens=3),
+                    Request(prompt=[7, 8], max_new_tokens=3)])
+    assert [len(r.out) for r in reqs] == [3, 3]
+    assert all(0 <= t < cfg.padded_vocab for r in reqs for t in r.out)
+    # a fixed ref pin (grouped_ref on the expert stacks) decodes the same
+    # tokens as auto on an empty cache (prior → ref/grouped_ref on CPU)
+    pin = DecodeEngine(sp, cfg, batch_size=2, max_len=32,
+                       matmul_policy="fixed:ref")
+    reqs_pin = pin.run([Request(prompt=[3, 4, 5], max_new_tokens=3),
+                        Request(prompt=[7, 8], max_new_tokens=3)])
+    assert [r.out for r in reqs_pin] == [r.out for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill fallback logging (interleaved MoE)
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_fallback_logs_reason(caplog):
+    from repro.configs.registry import get_smoke_config
+    from repro.models.decode import supports_chunked_prefill
+    from repro.models.model import init_params
+
+    # llama4: interleaved MoE (dense_blocks) → whole-prompt fallback + log
+    cfg = get_smoke_config("llama4-maverick-400b-a17b",
+                           n_layers=4, n_experts=4)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    assert "dense_blocks" in params
+    with caplog.at_level(logging.DEBUG, logger="repro.models.decode"):
+        assert not supports_chunked_prefill(params, cfg)
+    assert any("prefill_into_slot" in r.message and "dense_blocks" in r.message
+               for r in caplog.records)
+
+    # uniform MoE (phi3.5): chunked admission supported, nothing logged
+    caplog.clear()
+    cfg2 = _moe_cfg()
+    with caplog.at_level(logging.DEBUG, logger="repro.models.decode"):
+        assert supports_chunked_prefill({"blocks": {}}, cfg2)
+    assert not caplog.records
