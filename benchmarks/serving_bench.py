@@ -21,12 +21,17 @@ long prompt is admitted and their TTFT stays bounded.
 Writes ``BENCH_serving.json`` (schema below) for CI to surface in PRs:
 
   {"schema_version": 2, "arch": ..., "batch": ..., "workload": {...},
-   "prefill_chunk": C, "admission_budget": k,
+   "prefill_chunk": C, "admission_budget": k, "mesh": "1x8" | null,
    "generational": {"tokens": N, "seconds": s, "tok_s": r, "decode_steps": d,
                     "ttft_s": {"mean": m, "p50": p, "max": M}},
-   "continuous":   {... same keys ...},
+   "continuous":   {... same keys, plus "admission_steps"/"sched_steps" ...},
    "speedup": continuous.tok_s / generational.tok_s,
    "ttft_ratio": continuous.ttft_s.max / generational.ttft_s.max}
+
+``decode_steps`` counts steps that ran a decode; the continuous path's
+admission-only steps (prompts still prefilling, nothing live to decode) are
+reported separately as ``admission_steps``.  ``--mesh DxM`` runs both paths
+on a sharded engine (TP on model, MoE EP on data) over forced host devices.
 
 Run:  PYTHONPATH=src python benchmarks/serving_bench.py --smoke
       (CPU-friendly reduced config; full mode uses the registry smoke config
@@ -68,23 +73,28 @@ def make_requests(n: int, short_new: int, long_new: int, long_every: int,
     return reqs
 
 
-def run_generational(engine: DecodeEngine, reqs: list[Request]) -> int:
+def run_generational(engine: DecodeEngine, reqs: list[Request]) -> dict:
     """Seed baseline: batches of B run to the slowest request, sequentially."""
     steps = 0
     for i in range(0, len(reqs), engine.B):
         chunk = reqs[i:i + engine.B]
         engine.run(chunk)
         steps += max(len(r.out) for r in chunk)
-    return steps
+    return {"decode_steps": steps}
 
 
 def run_continuous(engine: DecodeEngine, reqs: list[Request],
-                   admission_budget: int | None = None) -> int:
+                   admission_budget: int | None = None) -> dict:
     sched = ContinuousScheduler(engine, admission_budget=admission_budget)
     for r in reqs:
         sched.submit(r)
     sched.run(max_steps=100_000)
-    return sched.stats.steps
+    # decode_steps counts steps that ran a decode; admission-only steps
+    # (all slots still prefilling) are tallied separately so tok/step stays
+    # an honest decode metric
+    return {"decode_steps": sched.stats.decode_steps,
+            "admission_steps": sched.stats.admission_steps,
+            "sched_steps": sched.stats.steps}
 
 
 def bench(path_fn, engine, mk_reqs) -> dict:
@@ -98,14 +108,14 @@ def bench(path_fn, engine, mk_reqs) -> dict:
     for r in reqs:
         r.on_token = stamp
     t0 = time.perf_counter()
-    steps = path_fn(engine, reqs)
+    step_stats = path_fn(engine, reqs)
     dt = time.perf_counter() - t0
     tokens = sum(len(r.out) for r in reqs)
     assert all(r.done or len(r.out) == r.max_new_tokens for r in reqs)
     ttft = sorted(first_tok[id(r)] - t0 for r in reqs if id(r) in first_tok)
     assert len(ttft) == len(reqs), "a request never emitted a first token"
     return {"tokens": tokens, "seconds": round(dt, 4),
-            "tok_s": round(tokens / dt, 2), "decode_steps": steps,
+            "tok_s": round(tokens / dt, 2), **step_stats,
             "ttft_s": {"mean": round(sum(ttft) / len(ttft), 4),
                        "p50": round(ttft[len(ttft) // 2], 4),
                        "max": round(ttft[-1], 4)}}
@@ -135,6 +145,11 @@ def main():
                     "continuous path (0 = unbounded)")
     ap.add_argument("--policy", default="auto",
                     help="ternary-matmul dispatch policy for both paths")
+    ap.add_argument("--mesh", default=None,
+                    help="run both paths sharded over a DxM (data x model) "
+                    "mesh, e.g. 1x8; axis product must equal the device "
+                    "count (CPU: XLA_FLAGS=--xla_force_host_platform_"
+                    "device_count=N)")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
 
@@ -145,6 +160,11 @@ def main():
     max_prompt = max(args.prompt_len, args.long_prompt_len)
     max_len = max_prompt + args.long_new + 1
     budget = args.admission_budget if args.admission_budget > 0 else None
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serving_mesh
+
+        mesh = make_serving_mesh(args.mesh)
     params = init_params(cfg, jax.random.PRNGKey(0))
     served = quantize_for_serving(params, cfg)
 
@@ -156,6 +176,7 @@ def main():
 
     results = {"schema_version": 2, "arch": cfg.name, "batch": args.batch,
                "policy": args.policy, "smoke": bool(args.smoke),
+               "mesh": args.mesh,
                "prefill_chunk": args.prefill_chunk,
                "admission_budget": args.admission_budget,
                "workload": {"requests": args.requests,
@@ -172,7 +193,7 @@ def main():
         # fresh engine per path: identical PRNG/jit state, no cross-warming
         engine = DecodeEngine(served, cfg, batch_size=args.batch,
                               max_len=max_len, matmul_policy=args.policy,
-                              prefill_chunk=args.prefill_chunk)
+                              prefill_chunk=args.prefill_chunk, mesh=mesh)
         # record the EFFECTIVE chunk (the engine clamps to the ring length
         # on windowed configs), not the requested flag
         results["prefill_chunk"] = engine.prefill_chunk

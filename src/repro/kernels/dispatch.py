@@ -48,6 +48,7 @@ import os
 import tempfile
 import time
 import warnings
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Callable
 
@@ -69,6 +70,7 @@ __all__ = [
     "select_kernel", "static_prior", "ternary_matmul",
     "grouped_ternary_matmul", "autotune",
     "AutotuneCache", "get_autotune_cache", "reset_autotune_cache",
+    "ShardInfo", "shard_scope", "current_shard_info",
     "DEFAULT_POLICY_ENV",
 ]
 
@@ -692,6 +694,102 @@ def reset_autotune_cache() -> None:
 
 
 # ---------------------------------------------------------------------------
+# Mesh-sharded dispatch: per-shard problem localization
+# ---------------------------------------------------------------------------
+
+
+def _div(dim: int, parts: int) -> int:
+    """Per-shard extent of ``dim`` split ``parts``-ways — only when the split
+    is even (mirrors ``sharding._validate``: a non-divisible dim falls back
+    to replication, so its dispatch extent stays global)."""
+    return dim // parts if parts > 1 and dim % parts == 0 else dim
+
+
+@dataclass(frozen=True)
+class ShardInfo:
+    """Trace-time mesh geometry for per-shard kernel dispatch.
+
+    Under GSPMD the traced shapes are *global*, but each device executes the
+    *local* shard of every matmul — so kernel selection and autotune-cache
+    keys must be derived from the per-shard problem, not the global one.
+    ``ShardInfo`` translates a global problem to its local shard using the
+    same name-based TP/EP rules as ``repro.parallel.sharding``:
+
+      * ``model``: TP degree — out-projection roles (``wq``/``wi``/...)
+        shard N, in-projection roles (``wo``/``down``/...) shard K;
+      * ``data``:  EP degree — grouped (MoE) problems shard the expert dim;
+      * ``batch``: divisor for the dense M dim (batch-sharded activations;
+        the engine sets it per entry point, since chunked prefill runs one
+        request at a time and must not divide its M = chunk extent).
+
+    An unknown/None role leaves K and N untouched (the weight is replicated).
+    Activated via :func:`shard_scope`; dispatch outside any scope is exactly
+    the single-device behavior.
+
+    ``n_heads``/``n_kv_heads`` mirror the head-gated attention rule
+    (``sharding.param_specs(heads=...)``): qkv projections only shard their
+    out dim at whole-head granularity, so when the head count doesn't divide
+    ``model`` the weight is replicated and N stays global here too.  Zero
+    (the default) disables the gate — legacy flat-dim sharding.
+    """
+
+    model: int = 1
+    data: int = 1
+    batch: int = 1
+    n_heads: int = 0
+    n_kv_heads: int = 0
+
+    def local_dense(self, role: str | None, m: int, k: int, n: int):
+        from repro.parallel.sharding import TP_IN_ROLES, TP_OUT_ROLES
+
+        m = _div(m, self.batch)
+        if role in TP_OUT_ROLES:
+            h = {"wq": self.n_heads, "wk": self.n_kv_heads,
+                 "wv": self.n_kv_heads}.get(role, 0)
+            if not h or h % self.model == 0:
+                n = _div(n, self.model)
+        elif role in TP_IN_ROLES:
+            k = _div(k, self.model)
+        return m, k, n
+
+    def local_grouped(self, role: str | None, e: int, c: int, k: int, n: int):
+        """MoE expert stacks: EP shards E on data; inside each expert the
+        up-projections (``wi``/``wg``) shard N and the down-projection
+        (``wo``/``down``) shards K on model — mirroring the ``moe`` packed
+        rules in ``sharding._param_spec``.  Capacity C stays global (token
+        routing is not capacity-sharded)."""
+        e = _div(e, self.data)
+        if role in ("wi", "wg"):
+            n = _div(n, self.model)
+        elif role in ("wo", "down"):
+            k = _div(k, self.model)
+        return e, c, k, n
+
+
+_SHARD_INFO: ShardInfo | None = None
+
+
+@contextmanager
+def shard_scope(info: ShardInfo | None):
+    """Activate ``info`` for every dispatch decision made inside the body.
+
+    Entered at *trace* time (the mesh-mode engine wraps its jitted entry
+    points) — selection happens while tracing, so the scope never needs to
+    survive into compiled execution.  ``None`` is a no-op scope."""
+    global _SHARD_INFO
+    prev = _SHARD_INFO
+    _SHARD_INFO = info
+    try:
+        yield
+    finally:
+        _SHARD_INFO = prev
+
+
+def current_shard_info() -> ShardInfo | None:
+    return _SHARD_INFO
+
+
+# ---------------------------------------------------------------------------
 # Selection + public entry point
 # ---------------------------------------------------------------------------
 
@@ -703,7 +801,8 @@ def _act_dtype_name(x: jax.Array) -> str:
 def select_kernel(m: int, k: int, n: int, act_dtype: str, *,
                   policy: str | None = None, backend: str | None = None,
                   cache: AutotuneCache | None = None,
-                  mu: int = 3, e: int | None = None) -> KernelSpec:
+                  mu: int = 3, e: int | None = None,
+                  role: str | None = None) -> KernelSpec:
     """Resolve a policy to a registered kernel for the given problem.
 
     Policies:
@@ -720,9 +819,21 @@ def select_kernel(m: int, k: int, n: int, act_dtype: str, *,
     ``grouped_variant`` (``ref → grouped_ref`` etc.) so ONE policy string
     governs a whole model — MoE layers included; pinning a dense kernel with
     no grouped analogue (the LUT/sign-flip paths) raises on MoE problems.
+
+    Under an active :func:`shard_scope`, the problem dims are first mapped
+    to their per-device shard via ``role`` (the projection's parameter-leaf
+    name, e.g. ``"wq"``/``"wo"``) — cache lookups and the prior then score
+    the *local* problem each device actually executes, keyed with the
+    unchanged schema-v2 key format at the local dims.
     """
     policy = policy or os.environ.get(DEFAULT_POLICY_ENV, "auto")
     backend = backend or jax.default_backend()
+    info = _SHARD_INFO
+    if info is not None:
+        if e is not None:
+            e, m, k, n = info.local_grouped(role, e, m, k, n)
+        else:
+            m, k, n = info.local_dense(role, m, k, n)
 
     if policy.startswith("fixed:"):
         spec = get_kernel(policy[len("fixed:"):])
@@ -774,7 +885,8 @@ def _default_interpret() -> bool:
 def ternary_matmul(x: jax.Array, w, *, scale=None, policy: str | None = None,
                    mu: int | None = None, interpret: bool | None = None,
                    backend: str | None = None,
-                   cache: AutotuneCache | None = None) -> jax.Array:
+                   cache: AutotuneCache | None = None,
+                   role: str | None = None) -> jax.Array:
     """``y[..., n] = Σ_k x[..., k] · trits(w)[n, k] · scale`` via the best
     registered kernel for this (shape, dtype, backend).
 
@@ -790,6 +902,9 @@ def ternary_matmul(x: jax.Array, w, *, scale=None, policy: str | None = None,
       interpret: run Pallas kernels in interpret mode; ``None`` (default)
         resolves from the executing backend — compiled on real TPU,
         interpret everywhere else.
+      role: the projection's parameter-leaf name (``"wq"``, ``"wo"``, ...);
+        only consulted under an active :func:`shard_scope`, where it decides
+        which dim the TP axis shards so dispatch keys on the local problem.
 
     Returns ``[..., N]`` in ``x``'s dtype (float inputs) or float32 (int8
     inputs).  Selection happens at Python/trace time from *static* shapes, so
@@ -807,7 +922,7 @@ def ternary_matmul(x: jax.Array, w, *, scale=None, policy: str | None = None,
     act = _act_dtype_name(x)
 
     spec = select_kernel(m, k, n, act, policy=policy, backend=backend,
-                         cache=cache, mu=mu)
+                         cache=cache, mu=mu, role=role)
     if interpret is None:
         interpret = _default_interpret()
     y = spec.run(x2, tw, mu, interpret)
@@ -822,7 +937,8 @@ def grouped_ternary_matmul(x: jax.Array, w, *, scale=None,
                            policy: str | None = None, mu: int | None = None,
                            interpret: bool | None = None,
                            backend: str | None = None,
-                           cache: AutotuneCache | None = None) -> jax.Array:
+                           cache: AutotuneCache | None = None,
+                           role: str | None = None) -> jax.Array:
     """``y[e, ..., n] = Σ_k x[e, ..., k] · trits(w)[e, n, k] · scale[e]`` —
     the batched-expert (MoE) entry point of the dispatch layer.
 
@@ -832,9 +948,11 @@ def grouped_ternary_matmul(x: jax.Array, w, *, scale=None,
       w: :class:`GroupedTernaryWeight` or stacked int8 trits ``[E, N, K]``.
       scale: overrides ``w``'s per-expert scale ``[E]`` (rank-1, applied
         once on the way out).
-      policy / mu / interpret / backend / cache: as :func:`ternary_matmul`;
-        ``fixed:<dense>`` pins map through the dense kernel's grouped
-        variant so one policy string governs dense and MoE layers alike.
+      policy / mu / interpret / backend / cache / role: as
+        :func:`ternary_matmul`; ``fixed:<dense>`` pins map through the dense
+        kernel's grouped variant so one policy string governs dense and MoE
+        layers alike, and ``role`` (under a :func:`shard_scope`) localizes
+        the EP-sharded expert dim and the TP-sharded K or N.
 
     Returns ``[E, ..., N]`` in ``x``'s dtype (float in) or float32 (int8
     in).  Selection is static-shape/trace-time, keyed on
@@ -856,7 +974,7 @@ def grouped_ternary_matmul(x: jax.Array, w, *, scale=None,
     act = _act_dtype_name(x)
 
     spec = select_kernel(c, k, n, act, policy=policy, backend=backend,
-                         cache=cache, mu=mu, e=E)
+                         cache=cache, mu=mu, e=E, role=role)
     if interpret is None:
         interpret = _default_interpret()
     y = spec.run(x3, gw, mu, interpret)

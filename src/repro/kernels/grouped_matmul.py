@@ -21,6 +21,13 @@ the way out (``y * scale[:, None, None]``), same convention as the dense
 kernels.  Decode-time expert capacity ``C`` is tiny (often 1), so the
 activation block is padded up — the launch stays profitable because the win
 is streamed weight bytes, not MACs.
+
+Under a serving mesh the expert stack is expert-parallel on the ``data``
+axis and each expert's matmul tensor-parallel on ``model`` (wi/wg shard N,
+wo shards K — rules in ``repro/parallel/sharding.py``); dispatch sees the
+**per-shard** problem (local ``E``/``K``/``N`` via
+``kernels.dispatch.ShardInfo.local_grouped``), so autotune cache keys and
+backend choice follow what each device actually runs, not the global shapes.
 """
 
 from __future__ import annotations

@@ -23,6 +23,37 @@ def make_mesh_for(devices: int, model_parallel: int = 1):
                          ("data", "model"))
 
 
+def make_serving_mesh(spec: str):
+    """Parse a ``--mesh`` CLI spec into a serving mesh over local devices.
+
+    ``"DxM"`` → ``(data, model)``; ``"PxDxM"`` → ``(pod, data, model)``.
+    E.g. ``--mesh 1x8`` is 8-way tensor parallelism, ``--mesh 2x4`` shards
+    MoE experts 2-way on data with 4-way TP inside each expert.  The axis
+    product must match the available device count (on CPU CI, forced via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    """
+    try:
+        shape = tuple(int(p) for p in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"bad mesh spec {spec!r}; expected e.g. '1x8'")
+    if len(shape) == 2:
+        axes = ("data", "model")
+    elif len(shape) == 3:
+        axes = ("pod", "data", "model")
+    else:
+        raise ValueError(
+            f"bad mesh spec {spec!r}; expected 'DxM' or 'PxDxM'")
+    n = 1
+    for s in shape:
+        n *= s
+    avail = len(jax.devices())
+    if n != avail:
+        raise ValueError(
+            f"mesh {spec!r} needs {n} devices but {avail} are available "
+            "(on CPU, set XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return jax.make_mesh(shape, axes)
+
+
 # Hardware constants for the roofline (assignment block).
 PEAK_FLOPS_BF16 = 197e12     # per chip
 HBM_BW = 819e9               # bytes/s per chip

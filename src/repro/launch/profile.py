@@ -10,10 +10,8 @@ Usage:
   python -m repro.launch.profile --arch gemma-7b --shape decode_32k [--multi]
 """
 
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
-
 import argparse
+import os
 import re
 
 from repro.launch import hlo_cost
@@ -70,6 +68,11 @@ def profile_text(text: str, top: int = 15) -> str:
 
 
 def main():
+    # 512 placeholder host devices for the production-mesh lowering; set here
+    # (not at import) so merely importing this module — nothing above main()
+    # touches jax — never changes the device count of the embedding process
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)

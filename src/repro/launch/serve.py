@@ -9,7 +9,14 @@ Usage:
   python -m repro.launch.serve --arch bitnet-b1.58-2b --smoke \
       [--ckpt-dir DIR] [--batch 4] [--new-tokens 32] [--temperature 0.8] \
       [--discipline continuous|generational] [--stream] \
-      [--prefill-chunk 32] [--admission-budget 1]
+      [--prefill-chunk 32] [--admission-budget 1] [--mesh 1x8]
+
+``--mesh DxM`` (e.g. ``1x8``) serves sharded: packed ternary weights are
+tensor-parallel on the ``model`` axis and MoE expert stacks expert-parallel
+on ``data`` (rules in ``repro/parallel/sharding.py``), the KV/state cache is
+sharded alongside, and kernel dispatch keys its autotune cache on the
+per-shard local problems.  The axis product must match the device count —
+on CPU, force devices with XLA_FLAGS=--xla_force_host_platform_device_count=8.
 
 Admission is chunked and length-bucketed on supported architectures:
 prompts are padded to a multiple of ``--prefill-chunk`` and prefilled one
@@ -58,6 +65,10 @@ def main():
                     default="continuous")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are emitted (continuous only)")
+    ap.add_argument("--mesh", default=None,
+                    help="serve sharded over a DxM (data x model) device "
+                    "mesh, e.g. 1x8 (TP) or 2x4 (EP x TP); axis product "
+                    "must equal the device count")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -72,11 +83,18 @@ def main():
 
     served = quantize_for_serving(params, cfg)
     print(f"[serve] {cfg.name}: packed {packed_bits_per_weight(served):.3f} b/w")
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serving_mesh
+
+        mesh = make_serving_mesh(args.mesh)
+        print(f"[serve] mesh {args.mesh}: "
+              f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
     engine = DecodeEngine(served, cfg, batch_size=args.batch,
                           max_len=args.max_len,
                           sampler=SamplerConfig(temperature=args.temperature,
                                                 top_k=args.top_k),
-                          prefill_chunk=args.prefill_chunk)
+                          prefill_chunk=args.prefill_chunk, mesh=mesh)
     n_req = args.requests if args.requests is not None else args.batch
     reqs = [Request(prompt=[7 + i, 13 + i], max_new_tokens=args.new_tokens)
             for i in range(n_req)]
@@ -98,7 +116,7 @@ def main():
         for r in reqs:
             sched.submit(r)
         sched.run()
-        steps = sched.stats.steps
+        steps = sched.stats.decode_steps
     dt = time.time() - t0
     n = sum(len(r.out) for r in reqs)
     print(f"[serve] {args.discipline}: {n} tokens / {steps} decode steps "

@@ -104,6 +104,49 @@ def quantize_for_serving(p: Params, cfg: ModelConfig) -> Params:
     return walk(p, ())
 
 
+def layer_matmul_problems(cfg: ModelConfig, batch_size: int,
+                          seq_len: int = 1
+                          ) -> list[tuple[str, int, int, int]]:
+    """Role-tagged dense matmul problems ``(role, M, K, N)`` one forward
+    step issues — ``role`` is the projection's parameter-leaf name, which is
+    what the name-based TP rules (``repro.parallel.sharding``) key on, so a
+    mesh-mode engine can map each problem to its per-device shard.  Roles
+    that dispatch identically (``wk``/``wv``; ``wi``/``wg``) are listed once
+    under a representative name."""
+    M = batch_size * seq_len
+    d = cfg.d_model
+    probs: set[tuple[str, int, int, int]] = set()
+
+    def proj(role, k, n):
+        if k and n:
+            probs.add((role, M, int(k), int(n)))
+
+    has_attn = cfg.block_pattern in ("attn", "zamba2") or cfg.is_encdec
+    if has_attn:
+        proj("wq", d, cfg.q_dim)
+        proj("wk", d, cfg.kv_dim)
+        proj("wo", cfg.q_dim, d)
+    if cfg.d_ff:
+        proj("wi", d, cfg.d_ff)          # wi / wg
+        proj("wo", cfg.d_ff, d)          # wo
+    if cfg.dense_ff:
+        proj("wi", d, cfg.dense_ff)
+        proj("wo", cfg.dense_ff, d)
+    if cfg.block_pattern in ("zamba2", "mamba2"):
+        d_in, _, _ = ssm.ssm_dims(cfg)
+        proj("wz", d, d_in)              # wz / wx
+        proj("wo", d_in, d)              # wo
+    if cfg.block_pattern == "xlstm":
+        d_in, _, _ = xlstm.mlstm_dims(cfg)
+        proj("up", d, 2 * d_in)          # mLSTM up
+        proj("wq", d_in, d_in)           # mLSTM wq/wk/wv
+        proj("down", d_in, d)            # mLSTM down
+        up = int(d * 4 / 3)
+        proj("ffn_up", d, 2 * up)        # sLSTM ffn_up
+        proj("ffn_down", up, d)          # sLSTM ffn_down
+    return sorted(probs)
+
+
 def layer_matmul_shapes(cfg: ModelConfig, batch_size: int,
                         seq_len: int = 1) -> list[tuple[int, int, int]]:
     """The distinct ternary-matmul problems ``(M, K, N)`` one forward step
@@ -115,38 +158,23 @@ def layer_matmul_shapes(cfg: ModelConfig, batch_size: int,
     (``benchmarks/autotune_sweep.py``) populates the dispatch cache with, so
     serving dispatch hits measured entries instead of the analytical prior.
     """
-    M = batch_size * seq_len
-    d = cfg.d_model
-    shapes: set[tuple[int, int, int]] = set()
+    return sorted({(m, k, n)
+                   for _, m, k, n in layer_matmul_problems(cfg, batch_size,
+                                                           seq_len)})
 
-    def proj(k, n):
-        if k and n:
-            shapes.add((M, int(k), int(n)))
 
-    has_attn = cfg.block_pattern in ("attn", "zamba2") or cfg.is_encdec
-    if has_attn:
-        proj(d, cfg.q_dim)
-        proj(d, cfg.kv_dim)
-        proj(cfg.q_dim, d)
-    if cfg.d_ff:
-        proj(d, cfg.d_ff)          # wi / wg
-        proj(cfg.d_ff, d)          # wo
-    if cfg.dense_ff:
-        proj(d, cfg.dense_ff)
-        proj(cfg.dense_ff, d)
-    if cfg.block_pattern in ("zamba2", "mamba2"):
-        d_in, _, _ = ssm.ssm_dims(cfg)
-        proj(d, d_in)              # wz / wx
-        proj(d_in, d)              # wo
-    if cfg.block_pattern == "xlstm":
-        d_in, _, _ = xlstm.mlstm_dims(cfg)
-        proj(d, 2 * d_in)          # mLSTM up
-        proj(d_in, d_in)           # mLSTM wq/wk/wv
-        proj(d_in, d)              # mLSTM down
-        up = int(d * 4 / 3)
-        proj(d, 2 * up)            # sLSTM ffn_up
-        proj(up, d)                # sLSTM ffn_down
-    return sorted(shapes)
+def layer_grouped_matmul_problems(cfg: ModelConfig, batch_size: int,
+                                  seq_len: int = 1
+                                  ) -> list[tuple[str, int, int, int, int]]:
+    """Role-tagged grouped (MoE expert) problems ``(role, E, C, K, N)`` —
+    the grouped analogue of :func:`layer_matmul_problems`.  Empty for
+    non-MoE configs."""
+    if not cfg.n_experts:
+        return []
+    E = cfg.n_experts
+    cap = moe_capacity(cfg, batch_size * seq_len)
+    d, f = cfg.d_model, cfg.d_ff
+    return sorted({("wi", E, cap, d, f), ("wo", E, cap, f, d)})
 
 
 def layer_grouped_matmul_shapes(cfg: ModelConfig, batch_size: int,
@@ -160,12 +188,9 @@ def layer_grouped_matmul_shapes(cfg: ModelConfig, batch_size: int,
     which is exactly the weight-bandwidth-bound operating point the grouped
     packed kernels exist for.  Empty for non-MoE configs.
     """
-    if not cfg.n_experts:
-        return []
-    E = cfg.n_experts
-    cap = moe_capacity(cfg, batch_size * seq_len)
-    d, f = cfg.d_model, cfg.d_ff
-    return sorted({(E, cap, d, f), (E, cap, f, d)})
+    return sorted({(e, c, k, n)
+                   for _, e, c, k, n in layer_grouped_matmul_problems(
+                       cfg, batch_size, seq_len)})
 
 
 def packed_bits_per_weight(p: Params) -> float:
@@ -358,8 +383,8 @@ def prefill(p: Params, cfg: ModelConfig, batch: dict, s_max: int):
                                   positions=positions,
                                   use_rope=False, return_kv=True)
             x = x + a
-            ck = linear(blk["cross_attn"]["wk"], enc_out, cfg)
-            cv = linear(blk["cross_attn"]["wv"], enc_out, cfg)
+            ck = linear(blk["cross_attn"]["wk"], enc_out, cfg, role="wk")
+            cv = linear(blk["cross_attn"]["wv"], enc_out, cfg, role="wv")
             Se = enc_out.shape[1]
             ck = ck.reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
             cv = cv.reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)

@@ -59,8 +59,16 @@ def rms_norm(p: Params, x: jax.Array, *, offset: bool = False, eps: float = 1e-6
     return (x * g).astype(dt)
 
 
-def linear(p: Params, x: jax.Array, cfg: ModelConfig, *, ternary: bool = True):
-    """Apply a (possibly ternary) linear layer.  See module docstring."""
+def linear(p: Params, x: jax.Array, cfg: ModelConfig, *, ternary: bool = True,
+           role: str | None = None):
+    """Apply a (possibly ternary) linear layer.  See module docstring.
+
+    ``role`` is the projection's parameter-leaf name (``"wq"``, ``"wo"``,
+    ...).  It only matters under a mesh (``dispatch.shard_scope``): the
+    TP rules in :mod:`repro.parallel.sharding` are name-based, so the name
+    is what tells dispatch which matmul dim is sharded on this device —
+    global ``(K, N)`` alone is ambiguous (``wq`` and ``wo`` share a shape
+    whenever ``q_dim == d_model`` but shard opposite dims)."""
     if "packed" in p:
         k = x.shape[-1]
         if p["packed"].ndim != 2:
@@ -75,7 +83,7 @@ def linear(p: Params, x: jax.Array, cfg: ModelConfig, *, ternary: bool = True):
         from repro.kernels.dispatch import TernaryWeight, ternary_matmul
 
         tw = TernaryWeight.from_packed(p["packed"], p["scale"], k, mu=cfg.mu)
-        y = ternary_matmul(x, tw, policy=cfg.matmul_policy)
+        y = ternary_matmul(x, tw, policy=cfg.matmul_policy, role=role)
     else:
         w = p["w"]
         if ternary and cfg.quant == "qat":
@@ -247,9 +255,9 @@ def append_attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
     Returns (out [B, Sq, D], (k, v) [B, Sq, Hkv, hd]).
     """
     B, Sq, _ = x.shape
-    q = linear(p["wq"], x, cfg).reshape(B, Sq, cfg.n_heads, cfg.head_dim)
-    k = linear(p["wk"], x, cfg).reshape(B, Sq, cfg.n_kv_heads, cfg.head_dim)
-    v = linear(p["wv"], x, cfg).reshape(B, Sq, cfg.n_kv_heads, cfg.head_dim)
+    q = linear(p["wq"], x, cfg, role="wq").reshape(B, Sq, cfg.n_heads, cfg.head_dim)
+    k = linear(p["wk"], x, cfg, role="wk").reshape(B, Sq, cfg.n_kv_heads, cfg.head_dim)
+    v = linear(p["wv"], x, cfg, role="wv").reshape(B, Sq, cfg.n_kv_heads, cfg.head_dim)
     if cfg.qk_norm:
         q = rms_norm(p["q_norm"], q)
         k = rms_norm(p["k_norm"], k)
@@ -258,7 +266,7 @@ def append_attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
     o = _sdpa(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype), cfg,
               q_pos=positions, k_pos=k_positions, window=window,
               extra_kv=(k, v, positions))
-    return linear(p["wo"], o, cfg), (k, v)
+    return linear(p["wo"], o, cfg, role="wo"), (k, v)
 
 
 def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
@@ -284,7 +292,7 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
     [B, Sq] per-row (continuous decode).
     """
     B, Sq, _ = x.shape
-    q = linear(p["wq"], x, cfg).reshape(B, Sq, cfg.n_heads, cfg.head_dim)
+    q = linear(p["wq"], x, cfg, role="wq").reshape(B, Sq, cfg.n_heads, cfg.head_dim)
     if cfg.qk_norm:
         q = rms_norm(p["q_norm"], q)
     if use_rope:
@@ -294,8 +302,8 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
     if kv is not None:
         k, v = kv
     else:
-        k = linear(p["wk"], x, cfg).reshape(B, Sq, cfg.n_kv_heads, cfg.head_dim)
-        v = linear(p["wv"], x, cfg).reshape(B, Sq, cfg.n_kv_heads, cfg.head_dim)
+        k = linear(p["wk"], x, cfg, role="wk").reshape(B, Sq, cfg.n_kv_heads, cfg.head_dim)
+        v = linear(p["wv"], x, cfg, role="wv").reshape(B, Sq, cfg.n_kv_heads, cfg.head_dim)
         if cfg.qk_norm:
             k = rms_norm(p["k_norm"], k)
         if use_rope:
@@ -317,7 +325,7 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
         assert k_positions is not None, "decode requires explicit k_positions"
     out = _sdpa(q, k.astype(q.dtype), v.astype(q.dtype), cfg,
                 q_pos=positions, k_pos=k_positions, kind=kind, window=window)
-    out = linear(p["wo"], out, cfg)
+    out = linear(p["wo"], out, cfg, role="wo")
     if return_kv:
         return out, (k, v)
     return (out, new_cache) if cache is not None else out
@@ -344,10 +352,11 @@ def init_ffn(key, cfg: ModelConfig, *, stack=(), d_ff: int | None = None) -> Par
 def ffn(p: Params, x: jax.Array, cfg: ModelConfig):
     """Gated FFN (SwiGLU/GeGLU) or plain 2-layer MLP (whisper)."""
     if "wg" in p:
-        h = _act(cfg.act_fn)(linear(p["wg"], x, cfg)) * linear(p["wi"], x, cfg)
+        h = _act(cfg.act_fn)(linear(p["wg"], x, cfg, role="wg")) \
+            * linear(p["wi"], x, cfg, role="wi")
     else:
-        h = _act(cfg.act_fn)(linear(p["wi"], x, cfg))
-    return linear(p["wo"], h, cfg)
+        h = _act(cfg.act_fn)(linear(p["wi"], x, cfg, role="wi"))
+    return linear(p["wo"], h, cfg, role="wo")
 
 
 def moe_capacity(cfg: ModelConfig, tokens: int) -> int:
@@ -383,9 +392,12 @@ def _maybe_quant_expert(w, cfg: ModelConfig):
     return w
 
 
-def _expert_matmul(leaf: Params, cfg: ModelConfig, d_in: int):
+def _expert_matmul(leaf: Params, cfg: ModelConfig, d_in: int,
+                   role: str | None = None):
     """Returns f: [E, C, d_in] → [E, C, d_out] for train ({"w"}) or packed
     ({"packed" [E, d_out, d_in/5], "scale" [E]}) expert weights.
+    ``role`` names the expert leaf (``"wi"``/``"wg"``/``"wo"``) so mesh-mode
+    dispatch (``dispatch.shard_scope``) can localize the EP/TP-sharded dims.
 
     The packed (serving) path goes through the unified dispatch layer's
     grouped entry point, so the expert stack streams as base-3 packed bytes
@@ -402,7 +414,8 @@ def _expert_matmul(leaf: Params, cfg: ModelConfig, d_in: int):
         gw = GroupedTernaryWeight.from_packed(leaf["packed"], leaf["scale"],
                                               d_in, mu=cfg.mu)
         return lambda t: grouped_ternary_matmul(t, gw,
-                                                policy=cfg.matmul_policy)
+                                                policy=cfg.matmul_policy,
+                                                role=role)
     w = _maybe_quant_expert(leaf["w"], cfg)
     return lambda t: jnp.einsum("ecd,edf->ecf", t, w.astype(t.dtype))
 
@@ -453,9 +466,9 @@ def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig):
         xf[tok_of], mode="drop")
     disp = buf[:-1].reshape(E, cap, D)
 
-    up_i = _expert_matmul(p["wi"], cfg, D)
-    up_g = _expert_matmul(p["wg"], cfg, D)
-    down = _expert_matmul(p["wo"], cfg, cfg.d_ff)
+    up_i = _expert_matmul(p["wi"], cfg, D, role="wi")
+    up_g = _expert_matmul(p["wg"], cfg, D, role="wg")
+    down = _expert_matmul(p["wo"], cfg, cfg.d_ff, role="wo")
     h = _act(cfg.act_fn)(up_g(disp)) * up_i(disp)
     eout = down(h).reshape(E * cap, D)                              # [E·cap, D]
 

@@ -294,8 +294,8 @@ def _whisper_dec_trunk(p, cfg: ModelConfig, h, enc_out, positions):
     def body(x, blk):
         x = x + attention(blk["self_attn"], rms_norm(blk["ln1"], x), cfg,
                           positions=positions, use_rope=False)
-        k = linear(blk["cross_attn"]["wk"], enc_out, cfg)
-        v = linear(blk["cross_attn"]["wv"], enc_out, cfg)
+        k = linear(blk["cross_attn"]["wk"], enc_out, cfg, role="wk")
+        v = linear(blk["cross_attn"]["wv"], enc_out, cfg, role="wv")
         B, Se = enc_out.shape[:2]
         kv = (k.reshape(B, Se, cfg.n_kv_heads, cfg.head_dim),
               v.reshape(B, Se, cfg.n_kv_heads, cfg.head_dim))

@@ -131,8 +131,8 @@ def mamba2_block(p: Params, x: jax.Array, cfg: ModelConfig, *,
     d_in, H, N = ssm_dims(cfg)
     P = cfg.ssm_head_dim
 
-    z = linear(p["wz"], x, cfg)
-    xs = linear(p["wx"], x, cfg)
+    z = linear(p["wz"], x, cfg, role="wz")
+    xs = linear(p["wx"], x, cfg, role="wx")
     Bi = linear(p["wB"], x, cfg, ternary=False)
     Ci = linear(p["wC"], x, cfg, ternary=False)
     dt = linear(p["wdt"], x, cfg, ternary=False).astype(jnp.float32)
@@ -164,5 +164,5 @@ def mamba2_block(p: Params, x: jax.Array, cfg: ModelConfig, *,
     y = y + xs.reshape(Bb, S, H, P).astype(jnp.float32) * p["D"][None, None, :, None]
     y = y.reshape(Bb, S, d_in).astype(x.dtype)
     y = rms_norm(p["norm"], y * jax.nn.silu(z))
-    y = linear(p["wo"], y, cfg)
+    y = linear(p["wo"], y, cfg, role="wo")
     return y, (h_fin, new_conv)

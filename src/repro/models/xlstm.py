@@ -128,11 +128,11 @@ def mlstm_block(p: Params, x: jax.Array, cfg: ModelConfig, *, state=None,
     """x: [B, S, D] → (y, new_state)."""
     B, S, _ = x.shape
     d_in, H, dk = mlstm_dims(cfg)
-    up = linear(p["up"], x, cfg)
+    up = linear(p["up"], x, cfg, role="up")
     xi, z = up[..., :d_in], up[..., d_in:]
-    q = linear(p["wq"], xi, cfg).reshape(B, S, H, dk) / (dk ** 0.5)
-    k = linear(p["wk"], xi, cfg).reshape(B, S, H, dk)
-    v = linear(p["wv"], xi, cfg).reshape(B, S, H, dk)
+    q = linear(p["wq"], xi, cfg, role="wq").reshape(B, S, H, dk) / (dk ** 0.5)
+    k = linear(p["wk"], xi, cfg, role="wk").reshape(B, S, H, dk)
+    v = linear(p["wv"], xi, cfg, role="wv").reshape(B, S, H, dk)
     gates = linear(p["wif"], xi, cfg, ternary=False).astype(jnp.float32)
     log_i = gates[..., :H]                                   # exp input gate (log-dom)
     log_f = jax.nn.log_sigmoid(gates[..., H:])               # sigmoid forget gate
@@ -156,7 +156,7 @@ def mlstm_block(p: Params, x: jax.Array, cfg: ModelConfig, *, state=None,
 
     y = y.reshape(B, S, d_in).astype(x.dtype) * jax.nn.silu(z)
     y = rms_norm(p["norm"], y)
-    return linear(p["down"], y, cfg), new_state
+    return linear(p["down"], y, cfg, role="down"), new_state
 
 
 # ---------------------------------------------------------------------------
@@ -230,7 +230,8 @@ def slstm_scan(p: Params, x: jax.Array, cfg: ModelConfig, state=None,
 def slstm_block(p: Params, x: jax.Array, cfg: ModelConfig, *, state=None):
     h, new_state = slstm_scan(p, x, cfg, state)
     h = rms_norm(p["norm"], h)
-    up = linear(p["ffn_up"], h, cfg)
+    up = linear(p["ffn_up"], h, cfg, role="ffn_up")
     a, b = jnp.split(up, 2, axis=-1)
-    y = linear(p["ffn_down"], jax.nn.gelu(a, approximate=True) * b, cfg)
+    y = linear(p["ffn_down"], jax.nn.gelu(a, approximate=True) * b, cfg,
+               role="ffn_down")
     return y, new_state

@@ -27,6 +27,12 @@ _OUT_MODEL = {"wq", "wk", "wv", "wi", "wg", "up", "wz", "wx", "ffn_up"}
 #: leaf keys whose first ("in") dim is tensor-parallel (out dim = d_model)
 _IN_MODEL = {"wo", "down", "ffn_down"}
 
+#: public aliases — the dispatch layer (repro.kernels.dispatch.ShardInfo)
+#: resolves which matmul dim a projection role shards from these, so the
+#: per-shard autotune keys stay in lock-step with the parameter rules above
+TP_OUT_ROLES = frozenset(_OUT_MODEL)
+TP_IN_ROLES = frozenset(_IN_MODEL)
+
 
 def batch_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -37,8 +43,15 @@ def batch_spec(mesh: Mesh, extra_dims: int = 1) -> P:
     return P(batch_axes(mesh), *([None] * extra_dims))
 
 
+#: projection leaves whose out dim is reshaped to ``(heads, head_dim)`` and
+#: then *sliced within a head* downstream (rope's rotate-half) — model-
+#: sharding them is only safe at whole-head granularity.  Maps the leaf
+#: name to the ``heads=`` key the caller supplies (wk/wv share kv heads).
+_HEAD_ROLES = {"wq": "wq", "wk": "wk", "wv": "wk"}
+
+
 def _param_spec(path: tuple[str, ...], ndim: int, mesh: Mesh,
-                tied_embed: bool = False) -> P:
+                tied_embed: bool = False, heads=None) -> P:
     names = set(path)
     leaf = path[-1]
     parent = path[-2] if len(path) >= 2 else ""
@@ -48,6 +61,21 @@ def _param_spec(path: tuple[str, ...], ndim: int, mesh: Mesh,
         """Right-align the spec against ndim (stack axes lead, unsharded)."""
         lead = ndim - len(spec_tail)
         return P(*([None] * lead + spec_tail))
+
+    def head_safe(role: str) -> bool:
+        """True when model-sharding ``role``'s out dim lands on whole heads.
+
+        Splitting *inside* a head is both wrong-by-design for TP (rope /
+        per-head ops then need intra-head collectives) and, on this jax
+        version, numerically broken under partial replication (a combined
+        data×model mesh) — the reshape-to-heads + rotate-half slice of a
+        mid-head-sharded tensor miscompiles on CPU SPMD.  With no ``heads``
+        geometry supplied, legacy behavior (shard by flat out dim) stands.
+        """
+        key = _HEAD_ROLES.get(role)
+        if heads is None or key is None or key not in heads:
+            return True
+        return heads[key] % mesh.shape["model"] == 0
 
     # Embedding table: d_model-sharded normally; **vocab-sharded when tied**.
     # A tied head (logits = x @ embed.T) with a d_model-sharded table puts the
@@ -63,6 +91,11 @@ def _param_spec(path: tuple[str, ...], ndim: int, mesh: Mesh,
     if "lm_head" in names:
         return P(None, "model") if ndim == 2 else P()
 
+    # Router before the expert rule: its weight is [L?, d_model, E] — NOT an
+    # expert stack — and must stay replicated (matching "moe"+"w" in the
+    # expert branch would EP-shard its d_model dim).
+    if "router" in names:
+        return P()
     # MoE experts: [L?, E, din, dout] — EP on data, TP inside expert
     if "moe" in names and ndim >= 3 and leaf in ("w", "packed"):
         ep = "data" if has_data else None
@@ -71,21 +104,19 @@ def _param_spec(path: tuple[str, ...], ndim: int, mesh: Mesh,
         else:  # packed [L?, E, dout, din/5]
             tail = [ep, "model", None] if parent in ("wi", "wg") else [ep, None, "model"]
         return pad(tail)
-    if "router" in names:
-        return P()
 
     if leaf == "b":  # biases follow their matrix's out dim
-        if parent in _OUT_MODEL:
+        if parent in _OUT_MODEL and head_safe(parent):
             return pad(["model"])
         return P()
     if leaf == "w":
-        if parent in _OUT_MODEL and ndim >= 2:
+        if parent in _OUT_MODEL and ndim >= 2 and head_safe(parent):
             return pad([None, "model"])
         if parent in _IN_MODEL and ndim >= 2:
             return pad(["model", None])
         return P()
     if leaf == "packed":  # [..., dout, din/5]
-        if parent in _OUT_MODEL and ndim >= 2:
+        if parent in _OUT_MODEL and ndim >= 2 and head_safe(parent):
             return pad(["model", None])
         if parent in _IN_MODEL and ndim >= 2:
             return pad([None, "model"])
@@ -108,7 +139,16 @@ def _validate(spec: P, shape, mesh: Mesh) -> P:
     """Drop any axis whose shard count does not divide the dim exactly —
     jax.jit input shardings require even chunks.  Non-divisible dims (e.g.
     yi-34b's 56 heads on a 16-way axis) fall back to replication on that dim;
-    internal GSPMD propagation may still shard them with padding."""
+    internal GSPMD propagation may still shard them with padding.
+
+    A spec *longer* than the array's rank is a rule/shape mismatch, not a
+    divisibility concern — silently truncating it would shard the wrong dims
+    (or none), so it raises."""
+    if len(spec) > len(shape):
+        raise ValueError(
+            f"PartitionSpec {spec} has {len(spec)} axes but the array has "
+            f"rank {len(shape)} (shape {tuple(shape)}); sharding rules must "
+            f"not exceed the array's rank")
     dims = list(spec) + [None] * (len(shape) - len(spec))
     out = []
     for size, axes in zip(shape, dims):
@@ -122,26 +162,40 @@ def _validate(spec: P, shape, mesh: Mesh) -> P:
     return P(*out)
 
 
-def param_specs(params: Any, mesh: Mesh):
-    """Pytree of PartitionSpec mirroring ``params``."""
+def param_specs(params: Any, mesh: Mesh, *, heads=None):
+    """Pytree of PartitionSpec mirroring ``params``.
+
+    ``heads`` (optional) supplies head geometry — ``{"wq": n_heads,
+    "wk": n_kv_heads}`` — so attention projections are model-sharded only at
+    whole-head granularity (MQA/GQA kv projections replicate when the head
+    count does not divide the model axis)."""
     tied = isinstance(params, dict) and "embed" in params and \
         "lm_head" not in params
     return jax.tree_util.tree_map_with_path(
         lambda path, x: _validate(
             _param_spec(_path_names(path), getattr(x, "ndim", 0), mesh,
-                        tied_embed=tied),
+                        tied_embed=tied, heads=heads),
             getattr(x, "shape", ()), mesh),
         params)
 
 
-def param_shardings(params: Any, mesh: Mesh):
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs(params, mesh))
+def param_shardings(params: Any, mesh: Mesh, *, heads=None):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh, heads=heads))
 
 
-def cache_specs(cache: Any, mesh: Mesh):
-    """KV/state caches.  KV is sharded on head_dim (not kv-heads: GQA kv=8
-    doesn't divide a 16-way model axis); SSM states on their (large) head
-    dim; batch over pod+data when divisible."""
+def cache_specs(cache: Any, mesh: Mesh, *, kv_heads: int | None = None):
+    """KV/state caches.  By default KV is sharded on head_dim (not kv-heads:
+    GQA kv=8 doesn't divide a 16-way model axis); SSM states on their
+    (large) head dim; batch over pod+data when divisible.
+
+    With ``kv_heads`` given (the serving engine passes ``cfg.n_kv_heads``),
+    KV shards the *head* dim instead — whole heads only, falling back to
+    replication when the head count doesn't divide the model axis — matching
+    the head-gated parameter rule (``param_specs(heads=...)``): attention
+    reads the cache through per-head ops (rope-rotated q against it, online-
+    softmax per head), and a mid-head-sharded layout both forces intra-head
+    collectives and miscompiles on CPU SPMD under partial replication."""
     ba = batch_axes(mesh)
 
     def spec(path, x):
@@ -149,7 +203,10 @@ def cache_specs(cache: Any, mesh: Mesh):
         nd = x.ndim
         leaf = names[-1] if names else ""
         if leaf in ("k", "v", "cross_k", "cross_v") and nd == 5:
-            s = P(None, ba, None, None, "model")   # [L, B, S, Hkv, hd]
+            if kv_heads is not None:               # [L, B, S, Hkv, hd]
+                s = P(None, ba, None, "model", None)
+            else:
+                s = P(None, ba, None, None, "model")
         elif leaf == "pos":
             s = P()
         elif leaf == "ssm" and nd == 5:            # [L, B, H, N, P]
@@ -186,6 +243,18 @@ def batch_specs(batch: Any, mesh: Mesh):
         return _validate(P(ba, *([None] * (nd - 1))), x.shape, mesh)
 
     return jax.tree.map(spec, batch)
+
+
+def engine_state_specs(state: Any, mesh: Mesh, *, kv_heads: int | None = None):
+    """Serving-engine scheduler state (``DecodeEngine.sched_start``):
+    the KV/state ``cache`` through :func:`cache_specs`, every per-slot
+    control vector (``logits``/``live``/``index``/``remaining``/``stop``)
+    batch-sharded on dim 0 when divisible — the layout the mesh-mode
+    engine pins on its jitted admit-commit / sched-step entry points."""
+    control = {k: v for k, v in state.items() if k != "cache"}
+    specs = batch_specs(control, mesh)
+    specs["cache"] = cache_specs(state["cache"], mesh, kv_heads=kv_heads)
+    return specs
 
 
 def to_shardings(tree_specs: Any, mesh: Mesh):

@@ -75,7 +75,8 @@ PAD_TOKEN = 1
 class DecodeEngine:
     def __init__(self, params, cfg: ModelConfig, *, batch_size: int,
                  max_len: int, sampler: SamplerConfig | None = None,
-                 matmul_policy: str | None = None, prefill_chunk: int = 32):
+                 matmul_policy: str | None = None, prefill_chunk: int = 32,
+                 mesh=None):
         """``matmul_policy`` overrides ``cfg.matmul_policy`` for every ternary
         projection this engine executes ("auto" | "prior" | "fixed:<kernel>",
         see :mod:`repro.kernels.dispatch`).  Kernel selection happens once,
@@ -86,10 +87,22 @@ class DecodeEngine:
         trace (clamped to the ring length on windowed configs so a chunk
         never collides with itself).  Architectures without chunked-prefill
         support fall back to whole-prompt admission, which retraces per
-        prompt length."""
+        prompt length.
+
+        ``mesh`` (a ``jax.sharding.Mesh`` with the repo's ``data``/``model``
+        axes, see ``launch.mesh``) turns on sharded serving: packed weights
+        are placed per the TP/EP rules in :mod:`repro.parallel.sharding`
+        (``param_shardings``), the scheduler state's KV/state cache per
+        ``cache_specs``, and the jitted prefill-chunk / admit-commit /
+        sched-step entry points carry explicit in/out shardings so GSPMD
+        partitions every step.  Kernel dispatch runs under a
+        ``dispatch.shard_scope`` whose :class:`~repro.kernels.dispatch.ShardInfo`
+        maps each matmul to its per-device shard — autotune-cache keys and
+        prior scores are derived from the *local* problem.  The scheduling
+        protocol is unchanged: a ``ContinuousScheduler`` drives a sharded
+        engine exactly like a single-device one."""
         if matmul_policy is not None:
             cfg = cfg.with_(matmul_policy=matmul_policy)
-        self.params = params
         self.cfg = cfg
         self.B = batch_size
         self.batch_size = batch_size  # ScheduleBackend protocol name
@@ -98,6 +111,53 @@ class DecodeEngine:
         self.prefill_chunk = max(1, min(prefill_chunk,
                                         cache_len(cfg, max_len)))
         self.chunked_admission = supports_chunked_prefill(params, cfg)
+        self.mesh = mesh
+        #: per-entry-point trace-time shard geometry (mesh mode only).  The
+        #: batch divisor differs per entry: the batched decode step shards
+        #: its M = B rows on the data axis, while admission prefills one
+        #: request at a time (M = chunk length — sequence, not batch).
+        self._shard_infos: dict[str, Any] = {}
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.kernels.dispatch import ShardInfo
+            from repro.parallel import sharding as sh
+
+            axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            model = axes.get("model", 1)
+            data = axes.get("pod", 1) * axes.get("data", 1)
+            heads = dict(wq=cfg.n_heads, wk=cfg.n_kv_heads)
+            decode_info = ShardInfo(model=model, data=data, batch=data,
+                                    n_heads=cfg.n_heads,
+                                    n_kv_heads=cfg.n_kv_heads)
+            admit_info = ShardInfo(model=model, data=data, batch=1,
+                                   n_heads=cfg.n_heads,
+                                   n_kv_heads=cfg.n_kv_heads)
+            self._shard_infos = {
+                "decode_step": decode_info, "sched_step": decode_info,
+                "prefill": admit_info, "prefill_chunk": admit_info,
+                "admit_commit": admit_info,
+            }
+            self._psh = sh.param_shardings(params, mesh, heads=heads)
+            params = jax.device_put(params, self._psh)
+            repl = NamedSharding(mesh, PartitionSpec())
+            state_sds = jax.eval_shape(self._state_template)
+            self._state_sh = sh.to_shardings(
+                sh.engine_state_specs(state_sds, mesh,
+                                      kv_heads=cfg.n_kv_heads), mesh)
+            cache1_sds = jax.eval_shape(
+                lambda: init_cache(cfg, 1, self.max_len))
+            self._cache1_sh = sh.to_shardings(
+                sh.cache_specs(cache1_sds, mesh, kv_heads=cfg.n_kv_heads),
+                mesh)
+
+            def shardings(in_sh, out_sh):
+                return {"in_shardings": in_sh, "out_shardings": out_sh}
+        else:
+            repl = None
+
+            def shardings(in_sh, out_sh):
+                return {}
+        self.params = params
         #: jit traces per compiled entry point — the bucketed-admission
         #: guarantee is observable here: a mixed-length request stream keeps
         #: ``trace_counts["prefill_chunk"] == 1`` (one bucket shape)
@@ -118,28 +178,52 @@ class DecodeEngine:
         # live cache / state is donated — callers always replace it with the
         # returned value — so XLA updates the KV buffers in place instead of
         # copying the whole cache every token (same convention as
-        # launch.dryrun).
+        # launch.dryrun).  In mesh mode these three entry points pin their
+        # in/out shardings (params/cache/state per the sharding rules,
+        # host-read outputs replicated) so the state's device layout is
+        # stable step-over-step and donation aliases shard-for-shard.
         self._prefill_chunk_fn = jax.jit(
             self._counted("prefill_chunk",
                           lambda p, c, t, pos, take: model_prefill_chunk(
                               p, cfg, c, t, pos, take)),
-            donate_argnums=(1,))
+            donate_argnums=(1,),
+            **shardings(
+                (getattr(self, "_psh", None), getattr(self, "_cache1_sh", None),
+                 repl, repl, repl),
+                (getattr(self, "_cache1_sh", None), repl)))
         # donate only the big state: the single-row chunk cache cannot alias
         # any [B, ...] output buffer, so donating it would just warn
         self._admit_commit_fn = jax.jit(
             self._counted("admit_commit", self._admit_commit),
-            donate_argnums=(0,))
+            donate_argnums=(0,),
+            **shardings(
+                (getattr(self, "_state_sh", None),
+                 getattr(self, "_cache1_sh", None), repl, repl, repl, repl,
+                 repl),
+                getattr(self, "_state_sh", None)))
         self._sched_step_fn = jax.jit(
             self._counted("sched_step", self._make_sched_step()),
-            donate_argnums=(1,))
+            donate_argnums=(1,),
+            **shardings(
+                (getattr(self, "_psh", None), getattr(self, "_state_sh", None),
+                 repl),
+                (getattr(self, "_state_sh", None), repl, repl)))
         self._key = jax.random.PRNGKey(self.sampler.seed)
 
     def _counted(self, name: str, fn):
         """Wrap a to-be-jitted callable so each (re)trace bumps
-        ``trace_counts[name]`` — cache hits never re-enter the wrapper."""
+        ``trace_counts[name]`` — cache hits never re-enter the wrapper.
+        In mesh mode the trace also runs under the entry point's
+        ``dispatch.shard_scope``, so every ternary-matmul selection inside
+        keys on the per-device local problem."""
+        info = self._shard_infos.get(name)
+
         def wrapped(*args):
+            from repro.kernels.dispatch import shard_scope
+
             self.trace_counts[name] += 1
-            return fn(*args)
+            with shard_scope(info):
+                return fn(*args)
         return wrapped
 
     def matmul_shape_universe(self, *, include_prefill: bool = True
@@ -153,17 +237,31 @@ class DecodeEngine:
         ``grouped_ternary_matmul``).  Generational ``run()`` prefills at
         ``M = B · prompt_len`` for whatever prompt lengths arrive; those are
         workload-dependent and belong to ``benchmarks/autotune_sweep.py``,
-        not the engine's fixed universe."""
-        from repro.models.decode import (layer_grouped_matmul_shapes,
-                                         layer_matmul_shapes)
+        not the engine's fixed universe.
 
-        shapes = set(layer_matmul_shapes(self.cfg, self.B))
-        shapes |= set(layer_grouped_matmul_shapes(self.cfg, self.B))
+        In mesh mode the universe is **per-shard**: every problem is mapped
+        through the entry point's ``ShardInfo`` (the same localization
+        dispatch applies inside ``shard_scope``), so ``autotune_shapes``
+        measures and records exactly the local problems each device runs."""
+        from repro.models.decode import (layer_grouped_matmul_problems,
+                                         layer_matmul_problems)
+
+        sources = [(self.B, 1, "sched_step")]
         if include_prefill:
-            shapes |= set(layer_matmul_shapes(self.cfg, 1,
-                                              seq_len=self.prefill_chunk))
-            shapes |= set(layer_grouped_matmul_shapes(
-                self.cfg, 1, seq_len=self.prefill_chunk))
+            sources.append((1, self.prefill_chunk, "prefill_chunk"))
+        shapes: set[tuple[int, ...]] = set()
+        for bs, sl, entry in sources:
+            info = self._shard_infos.get(entry)
+            for role, m, k, n in layer_matmul_problems(self.cfg, bs,
+                                                       seq_len=sl):
+                if info is not None:
+                    m, k, n = info.local_dense(role, m, k, n)
+                shapes.add((m, k, n))
+            for role, e, c, k, n in layer_grouped_matmul_problems(
+                    self.cfg, bs, seq_len=sl):
+                if info is not None:
+                    e, c, k, n = info.local_grouped(role, e, c, k, n)
+                shapes.add((e, c, k, n))
         return sorted(shapes)
 
     def autotune_shapes(self, *, include_prefill: bool = True,
@@ -245,6 +343,14 @@ class DecodeEngine:
                 break
             cur = cur + 1
             logits, cache = self._step(self.params, cache, tokens, cur)
+        for r in requests:
+            if not r.done and len(r.out) >= r.max_new_tokens:
+                # budget exhausted (or zero budget): the request is finished
+                # even without a stop-token hit — same completion semantics
+                # as serve()'s on-device alive mask (live & !stop &
+                # remaining > 0), so a run() result can never slip past the
+                # scheduler's resubmission guard
+                r.done = True
         return requests
 
     # ------------------------------------------------------------------
@@ -276,8 +382,9 @@ class DecodeEngine:
 
         return step
 
-    def sched_start(self) -> dict:
-        """Fresh scheduler state: empty cache, all slots dead."""
+    def _state_template(self) -> dict:
+        """The scheduler-state pytree (also eval_shape'd in mesh mode to
+        derive the state shardings pinned on the jitted entry points)."""
         B, V = self.B, self.cfg.padded_vocab
         return {
             "cache": init_cache(self.cfg, B, self.max_len),
@@ -287,6 +394,15 @@ class DecodeEngine:
             "remaining": jnp.zeros((B,), jnp.int32),
             "stop": jnp.full((B,), -1, jnp.int32),
         }
+
+    def sched_start(self) -> dict:
+        """Fresh scheduler state: empty cache, all slots dead.  In mesh mode
+        the state is laid out per ``sharding.engine_state_specs`` up front,
+        so the first jitted step never reshards."""
+        state = self._state_template()
+        if self.mesh is not None:
+            state = jax.device_put(state, self._state_sh)
+        return state
 
     def _validate_request(self, request: Request) -> int:
         plen = len(request.prompt)

@@ -74,12 +74,23 @@ class ScheduleBackend(Protocol):
 
 @dataclass
 class SchedulerStats:
+    #: every :meth:`ContinuousScheduler.step` call — decode steps AND
+    #: admission-only steps (no slot live yet, prefill chunks advancing)
     steps: int = 0
+    #: steps that did admission work but ran no decode; wall-clock spent
+    #: here is prefill, not decode, so throughput math must not divide by it
+    admission_steps: int = 0
     admitted: int = 0
     completed: int = 0
     emitted_tokens: int = 0
     #: prefill chunks advanced through incremental admission
     prefill_chunks: int = 0
+
+    @property
+    def decode_steps(self) -> int:
+        """Steps that ran a backend decode (``sched_step``) — the number
+        serving benchmarks report as decode steps."""
+        return self.steps - self.admission_steps
 
 
 class ContinuousScheduler:
@@ -195,6 +206,10 @@ class ContinuousScheduler:
         self._advance_prefills()
         if self.num_active == 0:
             # pure-admission step: prefill chunks advanced, nothing to decode
+            # — still a step (it consumed wall-clock), tallied separately so
+            # decode throughput math stays honest
+            self.stats.steps += 1
+            self.stats.admission_steps += 1
             return []
         self._state, tokens, alive = self.backend.sched_step(self._state)
         finished: list[Request] = []

@@ -53,10 +53,11 @@ def _moe_block(sp):
 _DISPATCH_EXPERT_MATMUL = layers_mod._expert_matmul  # pre-monkeypatch binding
 
 
-def _einsum_reference_expert_matmul(leaf, cfg, d_in):
+def _einsum_reference_expert_matmul(leaf, cfg, d_in, role=None):
     """The pre-dispatch packed path: eager full-stack dequant + one einsum.
 
-    Kept verbatim as the differential oracle for the grouped kernels."""
+    Kept verbatim as the differential oracle for the grouped kernels
+    (``role`` is the real path's sharding hint — irrelevant here)."""
     if "packed" in leaf:
         w_t = encoding.unpack_base3(leaf["packed"], d_in)  # [E, dout, din]
         scale = leaf["scale"]

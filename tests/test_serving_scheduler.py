@@ -144,6 +144,19 @@ def test_submit_completed_request_rejected():
         sched.submit(r)
 
 
+def test_admission_only_steps_are_counted():
+    """A step that only advances admission (no live slot yet) must still bump
+    ``stats.steps`` — the regression was an early return that skipped the
+    tally, so benchmark tok/step silently inflated.  It lands in
+    ``admission_steps`` so ``decode_steps`` stays honest."""
+    backend = FakeBackend(1)
+    sched = ContinuousScheduler(backend)
+    sched.step()  # nothing queued, nothing active: pure-admission step
+    assert sched.stats.steps == 1
+    assert sched.stats.admission_steps == 1
+    assert sched.stats.decode_steps == 0
+
+
 # ---------------------------------------------------------------------------
 # real engine: overflow guard, queued serving, differential oracle
 # ---------------------------------------------------------------------------
@@ -310,6 +323,42 @@ def test_admission_budget_interleaves_decode_with_long_prefill(key):
     assert sched.stats.prefill_chunks >= 6 + 1  # long (6) + short (1)
     _assert_matches_oracle_up_to_ties(eng, short)
     _assert_matches_oracle_up_to_ties(eng, long)
+
+
+def test_run_marks_budget_exhausted_requests_done(key):
+    """run() regression: a request that spends its whole budget WITHOUT a
+    stop-token hit must come back ``done`` — it used to stay not-done, so
+    resubmitting it to a scheduler double-served it (duplicate tokens
+    appended after the completed stream)."""
+    eng = _tiny_engine(key, B=2)
+    reqs = [Request(prompt=[3, 4], max_new_tokens=3),
+            Request(prompt=[7], max_new_tokens=2)]
+    eng.run(reqs)
+    for r in reqs:
+        assert len(r.out) == r.max_new_tokens
+        assert r.done, "budget-exhausted request left not-done by run()"
+    # ...which is exactly what the scheduler's resubmission guard keys on
+    sched = ContinuousScheduler(eng)
+    with pytest.raises(ValueError, match="completed"):
+        sched.submit(reqs[0])
+
+
+def test_chunked_admission_steps_counted_separately(key):
+    """Steps that only advance a long prompt's prefill chunks (budget 1, no
+    live slot) count in ``stats.steps`` AND ``stats.admission_steps``;
+    ``decode_steps`` equals the steps that actually emitted tokens."""
+    eng = _tiny_engine(key, B=1, prefill_chunk=2)
+    long = Request(prompt=[5 + i for i in range(8)], max_new_tokens=4)
+    sched = ContinuousScheduler(eng, admission_budget=1)
+    sched.submit(long)
+    sched.run(max_steps=100)
+    assert long.done and len(long.out) == 4
+    # 8-token prompt at chunk 2 / budget 1 → ≥ 3 steps with no decode yet
+    assert sched.stats.admission_steps >= 3, sched.stats
+    assert sched.stats.decode_steps == \
+        sched.stats.steps - sched.stats.admission_steps
+    # B=1, single request: every decode step emitted exactly one token
+    assert sched.stats.decode_steps == sched.stats.emitted_tokens, sched.stats
 
 
 def test_prefill_into_slot_splices_one_row(key):

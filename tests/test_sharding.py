@@ -91,6 +91,72 @@ def test_opt_state_specs_divisible(key):
         _check_divisible(state_sds, sspecs, mesh)
 
 
+def test_validate_rejects_overlong_spec():
+    """A rule emitting more axes than the array has rank is a rule/shape
+    mismatch — the regression was a silent truncation that sharded the wrong
+    dims (or none)."""
+    mesh = MESHES[0]
+    with pytest.raises(ValueError, match="rank"):
+        sh._validate(P(None, "model", None), (32, 64), mesh)
+    # at-rank and under-rank specs still pass through (right-padded)
+    assert sh._validate(P(None, "model"), (32, 64), mesh) == P(None, "model")
+    assert sh._validate(P("data"), (32, 64), mesh) == P("data", None)
+
+
+def test_param_specs_golden_packed_moe(key):
+    """Golden specs over a packed MoE tree on a serving mesh (2 data × 4
+    model) with head geometry: EP on data + TP inside each expert for the
+    expert stacks, replicated router, whole-head-gated attention TP (MQA kv
+    replicates: 1 head doesn't divide model=4)."""
+    from repro.configs.registry import get_smoke_config
+
+    mesh = _abstract_mesh((2, 4), ("data", "model"))
+    cfg = get_smoke_config("phi3.5-moe-42b-a6.6b").with_(n_layers=2)
+    assert cfg.n_heads % 4 == 0 and cfg.n_kv_heads == 1
+    sds = jax.eval_shape(functools.partial(init_params, cfg), key)
+    packed = jax.eval_shape(
+        functools.partial(quantize_for_serving, cfg=cfg), sds)
+    specs = sh.param_specs(packed, mesh,
+                           heads={"wq": cfg.n_heads, "wk": cfg.n_kv_heads})
+    blocks = specs["blocks"]
+    # expert stacks [L, E, dout, din/5]: EP on data, wi/wg shard the out
+    # (dout) dim, wo the contraction it packs (din → model)
+    assert blocks["moe"]["wi"]["packed"] == P(None, "data", "model", None)
+    assert blocks["moe"]["wg"]["packed"] == P(None, "data", "model", None)
+    assert blocks["moe"]["wo"]["packed"] == P(None, "data", None, "model")
+    # router weight [L, d_model, E] is NOT an expert stack: replicated
+    # (the regression sharded its d_model dim via the expert rule)
+    router = jax.tree.leaves(blocks["moe"]["router"],
+                             is_leaf=lambda s: isinstance(s, P))
+    assert all(all(a is None for a in s) for s in router), \
+        blocks["moe"]["router"]
+    # attention: wq shards whole heads (4 % 4 == 0); MQA k/v replicate
+    assert blocks["attn"]["wq"]["packed"] == P(None, "model", None)
+    assert all(a is None for a in blocks["attn"]["wk"]["packed"])
+    assert all(a is None for a in blocks["attn"]["wv"]["packed"])
+    assert blocks["attn"]["wo"]["packed"] == P(None, None, "model")
+
+
+def test_cache_specs_kv_head_gated():
+    """Serving KV cache with ``kv_heads``: shard the head dim (whole heads),
+    falling back to replication when the head count doesn't divide model —
+    never the intra-head hd dim."""
+    mesh = _abstract_mesh((2, 4), ("data", "model"))
+    kv = {"k": jax.ShapeDtypeStruct((2, 4, 64, 8, 32), jnp.bfloat16),
+          "v": jax.ShapeDtypeStruct((2, 4, 64, 8, 32), jnp.bfloat16),
+          "pos": jax.ShapeDtypeStruct((4,), jnp.int32)}
+    ba = ("data",)
+    specs = sh.cache_specs(kv, mesh, kv_heads=8)
+    assert specs["k"] == P(None, ba, None, "model", None)
+    assert specs["v"] == P(None, ba, None, "model", None)
+    # MQA: 1 head can't split 4 ways — replicated, NOT silently hd-sharded
+    mqa = {"k": jax.ShapeDtypeStruct((2, 4, 64, 1, 32), jnp.bfloat16)}
+    assert sh.cache_specs(mqa, mesh, kv_heads=1)["k"] == \
+        P(None, ba, None, None, None)
+    # legacy (no kv_heads): hd-dim sharding as before
+    assert sh.cache_specs(kv, mesh)["k"] == P(None, ba, None, None, "model")
+
+
 def test_batch_size_one_replicated():
     """long_500k (global_batch=1) must fall back to replication, not crash."""
     mesh = MESHES[0]
