@@ -21,10 +21,14 @@ Writes ``BENCH_kernels.json``::
 
   {"schema_version": 1, "backend": ..., "smoke": true, "arch": ...,
    "dense": {"shape": {"M","K","N"}, "kernels": {name: us}, "best": name},
-   "grouped": [{"op_point": "decode"|"prefill",
+   "dense_int8": same shape, W1.58A8 (pre-quantized int8 activations),
+   "grouped": [{"op_point": "decode"|"prefill"|"decode_a8",
                 "shape": {"E","C","K","N"}, "kernels": {name: us},
                 "best": name, "best_us": us, "einsum_baseline_us": us,
-                "speedup_vs_einsum": ratio}, ...]}
+                "speedup_vs_einsum": ratio}, ...],
+   "a8_bytes": static bytes-moved at the decode point (bf16 dense vs the
+               grouped_w2a8 / grouped_tl2 packed streams + bits/weight) —
+               the non-flaky bandwidth gate CI asserts on}
 
 Run:  PYTHONPATH=src python benchmarks/kernel_bench.py --smoke
 """
@@ -78,12 +82,37 @@ def _einsum_baseline_us(e: int, c: int, k: int, n: int, dtype: str,
 
 
 def bench_dense(cache, *, m: int = 8, n_out: int = 512, k_in: int = 1024,
-                reps: int = 3) -> dict:
-    timings = dispatch.autotune(m, k_in, n_out, "float32", reps=reps,
+                reps: int = 3, act: str = "float32") -> dict:
+    timings = dispatch.autotune(m, k_in, n_out, act, reps=reps,
                                 cache=cache, save=False)
     return {"shape": {"M": m, "K": k_in, "N": n_out},
             "kernels": {name: round(us, 2) for name, us in timings.items()},
             "best": min(timings, key=timings.get)}
+
+
+def a8_bytes_moved(*, e: int, c: int, k: int, n: int, mu: int = 3) -> dict:
+    """Static bytes-moved comparison at a grouped decode operating point:
+    the W1.58A8 packed paths versus streaming a dense bf16 expert stack.
+    Decode is bandwidth-bound (every expert's weights stream every step), so
+    bytes moved per step is the property CI gates — unlike wall-clock on a
+    shared runner, it cannot flake."""
+    per = {
+        "bf16_dense": 2 * k * n,
+        "grouped_w2a8": int(dispatch.get_kernel("grouped_w2a8")
+                            .weight_bytes(k, n, mu)),
+        # the TL2 packed artifact (5 base-9 digit pairs per uint16 =
+        # 1.6 b/w) — taken from the Pallas spec: the grouped_tl2 XLA ref
+        # deliberately charges its onehot decode in the cost model, which
+        # is an interpret-mode dispatch-ordering device, not HBM traffic
+        "tl2_packed": int(dispatch.get_kernel("tl2").weight_bytes(k, n, mu)),
+    }
+    return {
+        "shape": {"E": e, "C": c, "K": k, "N": n},
+        "bytes_per_expert_step": per,
+        "bytes_per_step": {nm: b * e for nm, b in per.items()},
+        "bits_per_weight": {nm: round(8 * b / (k * n), 3)
+                            for nm, b in per.items()},
+    }
 
 
 def bench_grouped(cache, *, smoke: bool, reps: int = 3) -> list[dict]:
@@ -91,13 +120,17 @@ def bench_grouped(cache, *, smoke: bool, reps: int = 3) -> list[dict]:
     from repro.models.decode import layer_grouped_matmul_shapes
 
     cfg = get_smoke_config(MOE_ARCH) if smoke else get_config(MOE_ARCH)
-    points = [("decode", layer_grouped_matmul_shapes(cfg, DECODE_BATCH)),
-              ("prefill",
-               layer_grouped_matmul_shapes(cfg, 1, seq_len=PREFILL_CHUNK))]
+    decode_shapes = layer_grouped_matmul_shapes(cfg, DECODE_BATCH)
+    points = [("decode", cfg.dtype, decode_shapes),
+              ("prefill", cfg.dtype,
+               layer_grouped_matmul_shapes(cfg, 1, seq_len=PREFILL_CHUNK)),
+              # the W1.58A8 decode path: per-expert int8 activations through
+              # the same expert stacks (routes grouped_w2a8/grouped_tl2)
+              ("decode_a8", "int8", decode_shapes)]
     out = []
-    for op_point, shapes in points:
+    for op_point, act, shapes in points:
         for (e, c, k, n) in shapes:
-            timings = dispatch.autotune(c, k, n, cfg.dtype, reps=reps,
+            timings = dispatch.autotune(c, k, n, act, reps=reps,
                                         cache=cache, save=False,
                                         mu=cfg.mu, e=e)
             best = min(timings, key=timings.get)
@@ -114,14 +147,22 @@ def bench_grouped(cache, *, smoke: bool, reps: int = 3) -> list[dict]:
 
 
 def collect(*, smoke: bool = True, reps: int = 3) -> dict:
+    from repro.configs.registry import get_config, get_smoke_config
+    from repro.models.decode import layer_grouped_matmul_shapes
+
     cache = dispatch.get_autotune_cache()
+    cfg = get_smoke_config(MOE_ARCH) if smoke else get_config(MOE_ARCH)
+    e, c, k, n = layer_grouped_matmul_shapes(cfg, DECODE_BATCH)[0]
     results = {
         "schema_version": 1,
         "backend": jax.default_backend(),
         "smoke": bool(smoke),
         "arch": MOE_ARCH,
         "dense": bench_dense(cache, reps=reps),
+        # same dense problem with pre-quantized int8 activations (W1.58A8)
+        "dense_int8": bench_dense(cache, reps=reps, act="int8"),
         "grouped": bench_grouped(cache, smoke=smoke, reps=reps),
+        "a8_bytes": a8_bytes_moved(e=e, c=c, k=k, n=n, mu=cfg.mu),
     }
     cache.save()  # bench timings double as autotune measurements
     return results

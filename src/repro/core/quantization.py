@@ -84,10 +84,22 @@ def quantize_activations_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
 
     Returns ``(x_q, scale)`` with ``x ≈ x_q * scale`` and x_q int8 in
     [-127, 127].
+
+    Edge cases are hardened rather than propagated: an all-zero token row
+    quantizes to all-zero codes with a finite (EPS-derived) scale instead of a
+    0/0 NaN, a row containing ±inf gets a finite scale (f32 max) so its codes
+    saturate at ±127 instead of casting NaN→int8 (which wraps on some
+    backends), and NaN activations quantize to 0.
     """
-    absmax = jnp.clip(jnp.max(jnp.abs(x), axis=-1, keepdims=True), EPS, None)
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    absmax = jnp.where(jnp.isfinite(absmax), absmax,
+                       jnp.finfo(jnp.float32).max)
+    absmax = jnp.clip(absmax, EPS, None)  # all-zero row → EPS, never /0
     scale = (absmax / 127.0).astype(jnp.float32)
-    x_q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    q = jnp.where(jnp.isnan(q), 0.0, q)  # NaN input → zero code
+    # clip BEFORE the int8 cast: out-of-range f32→int8 wraps, clip saturates
+    x_q = jnp.clip(q, -127, 127).astype(jnp.int8)
     return x_q, scale
 
 

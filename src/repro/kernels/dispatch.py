@@ -8,9 +8,10 @@ hard-wiring:
 
   * a **registry** of every ternary matmul implementation in this package
     (``ref``, ``lut_onehot``, ``lut_gather``, ``dequant_packed``,
-    ``signflip``, ``w2a8``, plus the grouped batched-expert family
-    ``grouped_ref``/``grouped_dequant``/``grouped_w2a8``) with its supported
-    activation dtypes and shape constraints,
+    ``signflip``, ``w2a8``, the TL2 two-trit LUT family ``tl2``/``tl2_ref``,
+    plus the grouped batched-expert family
+    ``grouped_ref``/``grouped_dequant``/``grouped_w2a8``/``grouped_tl2``)
+    with its supported activation dtypes and shape constraints,
   * a **static prior** derived from the analytical cost model
     (:mod:`repro.core.cost_model`): per-MAC gate cost of each datapath plus a
     weight-bytes-streamed term, so small-M (decode) shapes lean to the packed
@@ -62,6 +63,9 @@ from repro.kernels.dequant_matmul import packed_matmul
 from repro.kernels.grouped_matmul import grouped_packed_matmul, grouped_w2a8_matmul
 from repro.kernels.lut_matmul import lut_matmul
 from repro.kernels.signflip_matmul import signflip_matmul
+from repro.kernels.tl2_matmul import (TRITS_PER_WORD, pack_tl2,
+                                      repack_base3_to_tl2, tl2_matmul,
+                                      tl2_matmul_ref)
 from repro.kernels.w2a8_matmul import w2a8_matmul
 
 __all__ = [
@@ -121,6 +125,7 @@ class TernaryWeight:
         self.scale = scale
         self.mu = mu
         self._keys: dict[int, jax.Array] = {}
+        self._tl2: jax.Array | None = None
 
     # -- constructors -------------------------------------------------------
 
@@ -183,6 +188,18 @@ class TernaryWeight:
             self._keys[mu] = keys
         return keys
 
+    def tl2(self) -> jax.Array:
+        """TL2 base-9 words ``[N, ceil(K/10)]`` uint16 (tl2 paths)."""
+        if self._tl2 is not None:
+            return self._tl2
+        if self._packed is not None:
+            words = repack_base3_to_tl2(self._packed, self._k)
+        else:
+            words = pack_tl2(self._w_t)
+        if _concrete(words):
+            self._tl2 = words
+        return words
+
 
 def _as_weight(w, scale, mu) -> TernaryWeight:
     if isinstance(w, TernaryWeight):
@@ -228,6 +245,7 @@ class GroupedTernaryWeight:
         self._k = int(w_t.shape[-1]) if w_t is not None else int(k)
         self.scale = scale
         self.mu = mu
+        self._tl2: jax.Array | None = None
 
     @classmethod
     def from_ternary(cls, w_t: jax.Array, scale=1.0, *,
@@ -279,6 +297,18 @@ class GroupedTernaryWeight:
         if _concrete(packed):
             self._packed = packed
         return packed
+
+    def tl2(self) -> jax.Array:
+        """Stacked TL2 base-9 words ``[E, N, ceil(K/10)]`` uint16."""
+        if self._tl2 is not None:
+            return self._tl2
+        if self._packed is not None:
+            words = repack_base3_to_tl2(self._packed, self._k)
+        else:
+            words = pack_tl2(self._w_t)
+        if _concrete(words):
+            self._tl2 = words
+        return words
 
 
 def _as_grouped_weight(w, scale, mu) -> GroupedTernaryWeight:
@@ -405,6 +435,16 @@ def _run_w2a8(x2, w, mu, interpret):
     return y.astype(jnp.float32)
 
 
+def _run_tl2(x2, w, mu, interpret):
+    # tl2_matmul zero-pads x to the unpacked word width and casts to f32
+    # itself (int8 casts losslessly), so int8 and float share one path.
+    return tl2_matmul(x2, w.tl2(), w.in_features, interpret=interpret)
+
+
+def _run_tl2_ref(x2, w, mu, interpret):
+    return tl2_matmul_ref(x2, w.tl2(), w.in_features)
+
+
 # -- grouped (batched-expert) adapters --------------------------------------
 
 
@@ -434,6 +474,19 @@ def _run_grouped_w2a8(x3, w, mu, interpret):
     y = grouped_w2a8_matmul(x3, w.packed(), w.in_features,
                             interpret=interpret)
     return y.astype(jnp.float32)
+
+
+def _run_grouped_tl2(x3, w, mu, interpret):
+    # lax.map of the XLA pair-table ref over the expert stack: only one
+    # expert's [C, N] tile plus its [N, G, 9] one-hot is live at a time and
+    # the jaxpr stays E-independent (a scan), mirroring grouped_ref.
+    k = w.in_features
+
+    def one(args):
+        xe, we = args
+        return tl2_matmul_ref(xe, we, k)
+
+    return jax.lax.map(one, (x3, w.tl2()))
 
 
 # -- cost-model hooks (static prior) ----------------------------------------
@@ -471,6 +524,23 @@ def _bytes_packed(k, n, mu):
 def _bytes_keys(k, n, mu):
     nbytes = 1 if encoding.key_bits(mu) <= 8 else 2
     return n * math.ceil(k / mu) * nbytes
+
+
+def _per_mac_tl2(k, n, c, mu):
+    # TL2 is the mu=2 point of the paper's LUT family: a trit *pair* keys a
+    # 9-entry table, independent of the base-3 group size in play.
+    return cm.area_per_throughput(2, max(k, 2), max(n, 1), c)
+
+
+def _bytes_tl2(k, n, mu):
+    return 2.0 * n * math.ceil(k / TRITS_PER_WORD)   # 1.6 b/w base-9 uint16
+
+
+def _bytes_tl2_onehot_f32(k, n, mu):
+    # the XLA TL2 refs materialize the decoded [N, ceil(K/2), 9] f32 one-hot
+    # fetch operand through memory; charge that stream (as _bytes_decoded_f32
+    # does for grouped_ref) so CPU serving keeps preferring the plain refs
+    return 4.0 * 9.0 * n * math.ceil(k / 2)
 
 
 register_kernel(KernelSpec(
@@ -511,6 +581,20 @@ register_kernel(KernelSpec(
     describe="W1.58A8 exact int8×trit→int32 kernel (paper Table I operating "
              "point); requires pre-quantized int8 activations"))
 
+register_kernel(KernelSpec(
+    name="tl2", run=_run_tl2, act_dtypes=_ALL_DTYPES, pallas=True,
+    prior_per_mac=_per_mac_tl2, weight_bytes=_bytes_tl2,
+    grouped_variant="grouped_tl2",
+    describe="TL2 two-trit → 9-entry LUT Pallas kernel (base-9 uint16 "
+             "packing, 1.6 b/w; bitnet.cpp TL2 / T-MAC idiom)"))
+
+register_kernel(KernelSpec(
+    name="tl2_ref", run=_run_tl2_ref, act_dtypes=_ALL_DTYPES, pallas=False,
+    prior_per_mac=_per_mac_tl2, weight_bytes=_bytes_tl2_onehot_f32,
+    grouped_variant="grouped_tl2",
+    describe="pure-XLA TL2 reference: dense pair-table build + one-hot "
+             "fetch contractions over base-9 packed words"))
+
 
 def _bytes_decoded_f32(k, n, mu):
     # grouped_ref streams the packed bytes AND round-trips a decoded f32
@@ -540,6 +624,13 @@ register_kernel(KernelSpec(
     prior_per_mac=_per_mac_dequant, weight_bytes=_bytes_packed,
     describe="grouped W1.58A8 exact int8×trit→int32 Pallas kernel with an "
              "expert grid dim and per-expert rank-1 rescale on the way out"))
+
+register_kernel(KernelSpec(
+    name="grouped_tl2", run=_run_grouped_tl2, act_dtypes=_ALL_DTYPES,
+    pallas=False, grouped=True, prior_per_mac=_per_mac_tl2,
+    weight_bytes=_bytes_tl2_onehot_f32,
+    describe="grouped TL2: lax.map of the XLA pair-table reference over the "
+             "stacked base-9 expert words (no dense [E, N, K] intermediate)"))
 
 
 # ---------------------------------------------------------------------------
@@ -740,16 +831,34 @@ class ShardInfo:
     n_kv_heads: int = 0
 
     def local_dense(self, role: str | None, m: int, k: int, n: int):
-        from repro.parallel.sharding import TP_IN_ROLES, TP_OUT_ROLES
+        from repro.parallel.sharding import (_NO_TP_ROLES, _SPLIT_ROLES,
+                                             TP_IN_ROLES, TP_OUT_ROLES)
 
         m = _div(m, self.batch)
         if role in TP_OUT_ROLES:
+            # partial-replication gate (ssm wz): replicated whenever batch
+            # axes coexist with model parallelism — mirrors _param_spec
+            if role in _NO_TP_ROLES:
+                if self.data == 1:
+                    n = _div(n, self.model)
+                return m, k, n
+            # split-site gate (xlstm ffn_up/up, ssm wx): architecture-
+            # constant segment counts, always on — mirrors _param_spec
+            seg = _SPLIT_ROLES.get(role)
+            if seg is not None:
+                if seg % self.model == 0:
+                    n = _div(n, self.model)
+                return m, k, n
             h = {"wq": self.n_heads, "wk": self.n_kv_heads,
                  "wv": self.n_kv_heads}.get(role, 0)
             if not h or h % self.model == 0:
                 n = _div(n, self.model)
         elif role in TP_IN_ROLES:
-            k = _div(k, self.model)
+            # column-parallel packed layout: the decode path's in-projections
+            # shard dout (see sharding._IN_MODEL — byte-dim sharding breaks
+            # the base-3 unpack's logical-K slice), so the local problem has
+            # a full K and an N divided by the TP degree
+            n = _div(n, self.model)
         return m, k, n
 
     def local_grouped(self, role: str | None, e: int, c: int, k: int, n: int):

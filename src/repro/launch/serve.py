@@ -69,9 +69,16 @@ def main():
                     help="serve sharded over a DxM (data x model) device "
                     "mesh, e.g. 1x8 (TP) or 2x4 (EP x TP); axis product "
                     "must equal the device count")
+    ap.add_argument("--act-dtype", choices=["none", "int8"], default="none",
+                    help="activation dtype for the packed ternary "
+                    "projections: int8 quantizes per token (absmax) in "
+                    "front of every packed matmul — the W1.58A8 end-to-end "
+                    "path (dispatch routes w2a8/grouped_w2a8/tl2)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.act_dtype != "none":
+        cfg = cfg.with_(act_dtype=args.act_dtype)
     key = jax.random.PRNGKey(0)
     params = init_params(cfg, key)
     if args.ckpt_dir:

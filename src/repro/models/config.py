@@ -59,6 +59,13 @@ class ModelConfig:
     quant: str = "qat"             # "fp" | "qat" (training); serving packs ternary
     quantize_acts: bool = False    # optional INT8 activation fake-quant in QAT
     mu: int = 3                    # LUT group size for the lut serving path
+    act_dtype: str = "none"        # serving activation dtype for the packed
+                                   # ternary projections: "none" keeps the
+                                   # compute dtype (bf16 dequant paths);
+                                   # "int8" quantizes per token (absmax) in
+                                   # front of every packed matmul so dispatch
+                                   # routes the W1.58A8 kernels
+                                   # (w2a8/grouped_w2a8/tl2)
     matmul_policy: str | None = None   # ternary-matmul dispatch: "auto" |
                                        # "prior" | "fixed:<kernel>"; None
                                        # defers to $REPRO_TERNARY_POLICY,

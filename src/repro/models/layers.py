@@ -19,7 +19,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantization import fake_quant_acts, fake_quant_ternary
+from repro.core.quantization import (fake_quant_acts, fake_quant_ternary,
+                                     quantize_activations_int8)
 from repro.models.config import ModelConfig
 
 Params = dict[str, Any]
@@ -83,7 +84,16 @@ def linear(p: Params, x: jax.Array, cfg: ModelConfig, *, ternary: bool = True,
         from repro.kernels.dispatch import TernaryWeight, ternary_matmul
 
         tw = TernaryWeight.from_packed(p["packed"], p["scale"], k, mu=cfg.mu)
-        y = ternary_matmul(x, tw, policy=cfg.matmul_policy, role=role)
+        if cfg.act_dtype == "int8" and jnp.issubdtype(x.dtype, jnp.floating):
+            # W1.58A8: per-token absmax int8 quant in front of the packed
+            # matmul; dispatch sees int8 and routes the w2a8/tl2 kernels.
+            # The activation scale is the second rank-1 correction (the
+            # weight scale is applied inside ternary_matmul).
+            x_q, x_scale = quantize_activations_int8(x)
+            y = ternary_matmul(x_q, tw, policy=cfg.matmul_policy, role=role)
+            y = (y * x_scale).astype(x.dtype)
+        else:
+            y = ternary_matmul(x, tw, policy=cfg.matmul_policy, role=role)
     else:
         w = p["w"]
         if ternary and cfg.quant == "qat":
@@ -413,6 +423,20 @@ def _expert_matmul(leaf: Params, cfg: ModelConfig, d_in: int,
 
         gw = GroupedTernaryWeight.from_packed(leaf["packed"], leaf["scale"],
                                               d_in, mu=cfg.mu)
+        if cfg.act_dtype == "int8":
+            # W1.58A8 expert path: quantize the post-dispatch expert inputs
+            # per token (row) — the all-zero padding/sentinel rows of the
+            # dispatch buffer quantize to zero codes with a finite scale, so
+            # they stay inert.  Per-expert weight scale applies inside
+            # grouped_ternary_matmul; the activation scale is rank-1 here.
+            def run(t):
+                t_q, t_scale = quantize_activations_int8(t)
+                y = grouped_ternary_matmul(t_q, gw,
+                                           policy=cfg.matmul_policy,
+                                           role=role)
+                return (y * t_scale).astype(t.dtype)
+
+            return run
         return lambda t: grouped_ternary_matmul(t, gw,
                                                 policy=cfg.matmul_policy,
                                                 role=role)

@@ -24,8 +24,27 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 #: leaf keys whose last ("out") dim is tensor-parallel
 _OUT_MODEL = {"wq", "wk", "wv", "wi", "wg", "up", "wz", "wx", "ffn_up"}
-#: leaf keys whose first ("in") dim is tensor-parallel (out dim = d_model)
+#: leaf keys for the d_model-output ("in") projections.  Their *dense* "w"
+#: leaves shard the contraction (din) dim — classic row-parallel TP with an
+#: f32 partial-sum all-reduce.  Their *packed* leaves shard the dout dim
+#: (column-parallel) instead: the packed byte axis is decoded by
+#: ``unpack_base3(·, k)``, whose slice-at-logical-K over a byte-sharded
+#: array computes wrong values at some shard widths under GSPMD (observed:
+#: 0.5+ absolute logit error on the dense oracle at model=8), and dout
+#: sharding is also *exact* — every device computes complete output columns,
+#: so there is no partial-sum reduce to reorder at all.
 _IN_MODEL = {"wo", "down", "ffn_down"}
+
+#: out-projections that are numerically unsafe to TP at all under partial
+#: replication (a combined data×model mesh): mamba2's gate projection
+#: ``wz`` feeds a plain elementwise ``y * silu(z)`` — nothing slices it, so
+#: the head/segment gates don't fire — yet its model-sharded output
+#: miscompiles on CPU SPMD exactly when *both* a batch axis and the model
+#: axis are >1 (observed: 0.4–1.0 absolute prefill-logit error on zamba2 at
+#: 2x4/4x2, bit-exact at 1x8).  Same partial-replication miscompile class
+#: as the rope slice bug the head gate works around, so: replicate these
+#: whenever batch axes coexist with model parallelism.
+_NO_TP_ROLES = {"wz"}
 
 #: public aliases — the dispatch layer (repro.kernels.dispatch.ShardInfo)
 #: resolves which matmul dim a projection role shards from these, so the
@@ -49,6 +68,19 @@ def batch_spec(mesh: Mesh, extra_dims: int = 1) -> P:
 #: name to the ``heads=`` key the caller supplies (wk/wv share kv heads).
 _HEAD_ROLES = {"wq": "wq", "wk": "wk", "wv": "wk"}
 
+#: projection leaves whose out dim is *sliced at fixed boundaries*
+#: downstream — the same hazard as mid-head attention slices, but with
+#: architecture-constant geometry, so the gate needs no ``heads=`` plumbing.
+#: Values are the segment count the slice assumes: xlstm's GLU-style
+#: two-way splits (slstm ``ffn_up``, mlstm ``up``) slice in half, and
+#: mamba2's ``wx`` output is one indivisible segment of the causal-conv
+#: concat (``[xs | B | C]``, B/C replicated) sliced back apart after the
+#: conv — TP-splitting it shears the concat/slice boundaries across shards
+#: (observed: diverging greedy streams on zamba2 at model=4).  Sharding is
+#: allowed only when whole segments land on shards (count % model == 0),
+#: mirroring the attention head gate.
+_SPLIT_ROLES = {"ffn_up": 2, "up": 2, "wx": 1}
+
 
 def _param_spec(path: tuple[str, ...], ndim: int, mesh: Mesh,
                 tied_embed: bool = False, heads=None) -> P:
@@ -63,15 +95,29 @@ def _param_spec(path: tuple[str, ...], ndim: int, mesh: Mesh,
         return P(*([None] * lead + spec_tail))
 
     def head_safe(role: str) -> bool:
-        """True when model-sharding ``role``'s out dim lands on whole heads.
+        """True when model-sharding ``role``'s out dim lands on whole
+        heads/segments.
 
-        Splitting *inside* a head is both wrong-by-design for TP (rope /
-        per-head ops then need intra-head collectives) and, on this jax
-        version, numerically broken under partial replication (a combined
-        data×model mesh) — the reshape-to-heads + rotate-half slice of a
-        mid-head-sharded tensor miscompiles on CPU SPMD.  With no ``heads``
-        geometry supplied, legacy behavior (shard by flat out dim) stands.
+        Splitting *inside* a head or slice segment is both wrong-by-design
+        for TP (rope / per-head ops then need intra-head collectives) and,
+        on this jax version, numerically broken under partial replication
+        (a combined data×model mesh) — the reshape-to-heads + rotate-half
+        slice of a mid-head-sharded tensor miscompiles on CPU SPMD, and the
+        split/concat sites in ``_SPLIT_ROLES`` diverge the same way.  The
+        attention gate needs caller-supplied ``heads`` geometry (legacy
+        flat-dim sharding stands without it); the split gate is always on.
         """
+        if role in _NO_TP_ROLES:
+            # partial-replication gate: TP only on a pure-model mesh
+            batch = 1
+            for a in ("pod", "data"):
+                batch *= mesh.shape.get(a, 1)
+            return batch == 1
+        seg = _SPLIT_ROLES.get(role)
+        if seg is not None:
+            # split gate: always on (the segment count is an architectural
+            # constant, not caller-supplied geometry)
+            return seg % mesh.shape["model"] == 0
         key = _HEAD_ROLES.get(role)
         if heads is None or key is None or key not in heads:
             return True
@@ -119,7 +165,12 @@ def _param_spec(path: tuple[str, ...], ndim: int, mesh: Mesh,
         if parent in _OUT_MODEL and ndim >= 2 and head_safe(parent):
             return pad(["model", None])
         if parent in _IN_MODEL and ndim >= 2:
-            return pad([None, "model"])
+            # column-parallel for packed in-projections: shard dout, NOT the
+            # packed byte dim (see the _IN_MODEL rationale above) — each
+            # device holds whole packed rows and emits complete d_model
+            # columns, so the unpack slice sees full byte rows and no
+            # partial-sum all-reduce exists to introduce reduce-order drift
+            return pad(["model", None])
         return P()
     # norms, scales, gates, conv, A_log, dt_bias, ... replicated
     return P()
@@ -210,9 +261,21 @@ def cache_specs(cache: Any, mesh: Mesh, *, kv_heads: int | None = None):
         elif leaf == "pos":
             s = P()
         elif leaf == "ssm" and nd == 5:            # [L, B, H, N, P]
-            s = P(None, ba, "model", None, None)
+            # replicated, not head-sharded: the mamba2 block's projections
+            # are replicated on combined meshes (wx is segment-gated, wz is
+            # in _NO_TP_ROLES), so a model-sharded state pins a per-step
+            # reshard of replicated compute — and that resharding hits the
+            # same CPU SPMD partial-replication miscompile (observed:
+            # diverging zamba2 decode streams at 2x4 with everything else
+            # exact).  Memory cost is modest: the state is [H, N, P] per
+            # slot, far smaller than a KV cache over max_len.
+            s = P(None, ba, None, None, None)
         elif leaf == "conv" and nd == 4:           # [L, B, K-1, C]
-            s = P(None, ba, None, "model")
+            # channels are the [xs | B | C] causal-conv concat, sliced back
+            # apart at fixed boundaries each step — model-sharding them
+            # shears the slices across shards exactly like the gated ``wx``
+            # projection that feeds it (see _SPLIT_ROLES), so they replicate
+            s = P(None, ba, None, None)
         elif leaf == "mC" and nd == 5:             # [half, B, H, dk, dv]
             s = P(None, ba, None, "model", None)
         elif leaf == "mn" and nd == 4:

@@ -168,9 +168,17 @@ class DecodeEngine:
             self._counted("decode_step",
                           lambda p, c, t, i: decode_step(p, cfg, c, t, i)),
             donate_argnums=(1,))
+        # the whole-prompt prefill also pins shardings in mesh mode: the
+        # archs without chunked-prefill support admit through `_admit_whole`
+        # → `_prefill`, and an unpinned jit would hand the commit a cache /
+        # logits pair in whatever layout GSPMD propagated (observed: model-
+        # sharded logits rejected by `_admit_commit_fn`'s replicated pin)
         self._prefill = jax.jit(
             self._counted("prefill",
-                          lambda p, b: prefill(p, cfg, b, s_max=self.max_len)))
+                          lambda p, b: prefill(p, cfg, b, s_max=self.max_len)),
+            **shardings(
+                (getattr(self, "_psh", None), repl),
+                (getattr(self, "_cache1_sh", None), repl)))
         # continuous-batching paths: the fixed-shape prefill chunk +
         # admission commit (bucketed path: one trace each; the whole-prompt
         # fallback reuses `_prefill` at B=1 — retraces per prompt length —
@@ -281,7 +289,11 @@ class DecodeEngine:
                 e, m, k, n = shape
             else:
                 (m, k, n), e = shape, None
-            results[shape] = autotune(m, k, n, self.cfg.dtype,
+            # under act_dtype="int8" every packed projection receives
+            # pre-quantized int8 activations, so that is the dtype the
+            # serving dispatch keys on (w2a8/tl2 become eligible)
+            act = "int8" if self.cfg.act_dtype == "int8" else self.cfg.dtype
+            results[shape] = autotune(m, k, n, act,
                                       mu=self.cfg.mu, cache=cache,
                                       save=False, e=e, **autotune_kw)
         cache.save()  # one write for the whole shape set

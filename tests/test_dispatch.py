@@ -534,3 +534,213 @@ def test_layer_matmul_shapes_scale_with_batch():
     assert all(m == 8 for m, _, _ in s8)
     d = cfg.d_model
     assert (1, d, cfg.q_dim) in s1 and (1, cfg.d_ff, d) in s1
+
+
+# ---------------------------------------------------------------------------
+# quantize_activations_int8 edge-case properties (feeds every int8 dispatch
+# path: fused dense/Expert activation quant must never emit NaN codes or
+# non-finite scales, whatever the token row looks like)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), rows=st.integers(1, 5),
+       cols=st.integers(1, 64), log_mag=st.integers(-30, 30))
+def test_act_quant_round_trip_bound(seed, rows, cols, log_mag):
+    """For finite input, dequantized codes land within half a quantization
+    step of the input per element, codes stay in [-127, 127], and the scale
+    is strictly positive and finite — across ~60 orders of magnitude."""
+    from repro.core.quantization import quantize_activations_int8
+
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((rows, cols)).astype(np.float32) * 10.0**log_mag
+    x_q, scale = quantize_activations_int8(jnp.asarray(x))
+    assert x_q.dtype == jnp.int8
+    q = np.asarray(x_q, np.int32)
+    s = np.asarray(scale, np.float64)
+    assert np.all(np.isfinite(s)) and np.all(s > 0)
+    assert q.min() >= -127 and q.max() <= 127
+    # absmax quant: |x - q*s| <= s/2 (+ tiny slack for the f32 divide)
+    err = np.abs(x.astype(np.float64) - q * s)
+    assert np.all(err <= s * 0.5 * (1 + 1e-5) + 1e-30), err.max() / s.min()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), cols=st.integers(1, 64),
+       kind=st.sampled_from(["zero", "inf", "-inf", "nan", "mixed"]))
+def test_act_quant_pathological_rows(seed, cols, kind):
+    """Hardened edge cases: an all-zero row yields all-zero codes with a
+    finite positive scale (no 0/0 NaN); ±inf rows saturate to ±127 instead
+    of wrapping through a NaN→int8 cast; NaN entries quantize to code 0.
+    Healthy rows alongside a pathological one keep their round-trip."""
+    from repro.core.quantization import quantize_activations_int8
+
+    rng = np.random.default_rng(seed)
+    healthy = rng.standard_normal((cols,)).astype(np.float32)
+    bad = np.zeros((cols,), np.float32)
+    if kind == "inf":
+        bad[0] = np.inf
+    elif kind == "-inf":
+        bad[0] = -np.inf
+    elif kind == "nan":
+        bad[0] = np.nan
+    elif kind == "mixed":
+        bad[: max(1, cols // 2)] = [np.inf, -np.inf, np.nan][seed % 3]
+    x = np.stack([bad, healthy])
+    x_q, scale = quantize_activations_int8(jnp.asarray(x))
+    q = np.asarray(x_q, np.int32)
+    s = np.asarray(scale, np.float64)
+    assert np.all(np.isfinite(s)) and np.all(s > 0)
+    assert q.min() >= -127 and q.max() <= 127
+    if kind == "zero":
+        assert not q[0].any()
+    elif kind in ("inf", "-inf"):
+        assert q[0, 0] == (127 if kind == "inf" else -127)
+    elif kind == "nan":
+        assert q[0, 0] == 0
+    # the healthy row is quantized independently (per-token scales)
+    err = np.abs(healthy.astype(np.float64) - q[1] * s[1])
+    assert np.all(err <= s[1] * 0.5 * (1 + 1e-5) + 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# W1.58A8 end-to-end: bf16-vs-int8 decode differential + jaxpr purity
+# ---------------------------------------------------------------------------
+
+#: per-layer-family logit tolerance for the A8 path: per-token absmax int8
+#: introduces ≤ 1/254 relative error per matmul; the MoE family runs more
+#: quantized projections per block (router stays full-precision) and its
+#: expert sum amplifies the per-expert rounding, so it gets more headroom
+A8_LOGIT_TOL = {"dense": 0.25, "moe": 0.45}
+
+
+def _greedy_logits(cfg, sp, steps=3):
+    import jax.numpy as jnp
+
+    from repro.models.decode import decode_step, prefill
+
+    batch = {"tokens": jnp.asarray([[3, 4, 5, 6, 7, 8, 9, 10]], jnp.int32)}
+    cache, logits = prefill(sp, cfg, batch, s_max=16)
+    out = [logits]
+    pos = jnp.asarray(8, jnp.int32)
+    for _ in range(steps):
+        tok = jnp.argmax(out[-1], axis=-1).astype(jnp.int32)
+        logits, cache = decode_step(sp, cfg, cache, tok, pos)
+        out.append(logits)
+        pos = pos + 1
+    return out
+
+
+@pytest.mark.parametrize("family,arch", [("dense", "qwen3-0.6b"),
+                                         ("moe", "phi3.5-moe-42b-a6.6b")])
+def test_int8_decode_matches_bf16(family, arch):
+    """The A8 path (per-token absmax int8 activations, scale as rank-1
+    post-correction) tracks the bf16 activation path within the family
+    tolerance on prefill and several greedy decode steps — same packed
+    weights, only ``act_dtype`` flips."""
+    from repro.configs.registry import get_smoke_config
+    from repro.models.decode import quantize_for_serving
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config(arch)
+    sp = quantize_for_serving(init_params(cfg, jax.random.PRNGKey(0)), cfg)
+    ref = _greedy_logits(cfg, sp)
+    a8 = _greedy_logits(cfg.with_(act_dtype="int8"), sp)
+    for i, (lr, lq) in enumerate(zip(ref, a8)):
+        err = float(jnp.max(jnp.abs(lr - lq)))
+        assert err <= A8_LOGIT_TOL[family], (i, err)
+
+
+@pytest.mark.parametrize("policy", ["fixed:w2a8", "fixed:tl2"])
+def test_int8_decode_step_jaxpr_no_float_dequant(policy):
+    """Acceptance walk for the W1.58A8 decode step: with ``act_dtype="int8"``
+    every ternary projection runs an int8-activation kernel — the jaxpr must
+    contain no *floating* dense weight materialization at any projection's
+    ``[N, K]``/``[K, N]`` (a bf16 dequant-then-matmul fallback would), and
+    the activation quantization must actually fuse (int8 converts appear).
+    Pinned per kernel family: w2a8 (2 b/w) and tl2 (1.6 b/w)."""
+    import jax.numpy as jnp
+
+    from repro.configs.registry import get_smoke_config
+    from repro.models.decode import (decode_step, layer_matmul_shapes,
+                                     prefill, quantize_for_serving)
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("qwen3-0.6b").with_(act_dtype="int8",
+                                              matmul_policy=policy)
+    sp = quantize_for_serving(init_params(cfg, jax.random.PRNGKey(0)), cfg)
+    B = 1
+    batch = {"tokens": jax.ShapeDtypeStruct((B, 8), jnp.int32)}
+    cache, _ = jax.eval_shape(lambda p, b: prefill(p, cfg, b, s_max=16),
+                              sp, batch)
+    jaxpr = jax.make_jaxpr(
+        lambda p, c: decode_step(p, cfg, c, jnp.zeros((B,), jnp.int32),
+                                 jnp.asarray(8, jnp.int32)))(sp, cache)
+
+    weight_shapes = set()
+    for _, k, n in layer_matmul_shapes(cfg, B):
+        weight_shapes |= {(k, n), (n, k)}
+
+    def walk(jaxpr, found):
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is None:
+                    continue
+                if (tuple(aval.shape) in weight_shapes
+                        and jnp.issubdtype(aval.dtype, jnp.floating)):
+                    found.append((eqn.primitive.name, tuple(aval.shape),
+                                  str(aval.dtype)))
+                if (eqn.primitive.name == "convert_element_type"
+                        and aval.dtype == jnp.int8):
+                    found.append(("int8_convert", tuple(aval.shape), "int8"))
+            for sub in eqn.params.values():
+                subs = sub if isinstance(sub, (list, tuple)) else [sub]
+                for s in subs:
+                    if hasattr(s, "jaxpr"):
+                        walk(s.jaxpr, found)
+        return found
+
+    found = walk(jaxpr.jaxpr, [])
+    dequants = [f for f in found if f[0] != "int8_convert"]
+    assert not dequants, f"floating dense-weight materialization: {dequants}"
+    assert any(f[0] == "int8_convert" for f in found), \
+        "no int8 activation quantization in the decode step"
+
+
+def test_int8_decode_step_every_dispatch_sees_int8(monkeypatch):
+    """Under ``act_dtype="int8"`` with ``policy="auto"``, every dense and
+    grouped dispatch in the decode step is keyed on int8 activations — the
+    per-token quantization is fused in front of *every* ternary projection
+    (dense and per-expert), never silently skipped back to a float path.
+    (Which int8-capable kernel wins is the prior/autotune's call.)"""
+    import jax.numpy as jnp
+
+    from repro.configs.registry import get_smoke_config
+    from repro.models.decode import decode_step, prefill, quantize_for_serving
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("phi3.5-moe-42b-a6.6b").with_(act_dtype="int8")
+    sp = quantize_for_serving(init_params(cfg, jax.random.PRNGKey(0)), cfg)
+    chosen: set[str] = set()
+    orig = dp.select_kernel
+
+    def spy(m, k, n, act_dtype, **kw):
+        spec = orig(m, k, n, act_dtype, **kw)
+        chosen.add((spec.name, act_dtype))
+        return spec
+
+    monkeypatch.setattr(dp, "select_kernel", spy)
+    B = 1
+    batch = {"tokens": jax.ShapeDtypeStruct((B, 8), jnp.int32)}
+    cache, _ = jax.eval_shape(lambda p, b: prefill(p, cfg, b, s_max=16),
+                              sp, batch)
+    chosen.clear()
+    jax.eval_shape(
+        lambda p, c: decode_step(p, cfg, c, jnp.zeros((B,), jnp.int32),
+                                 jnp.asarray(8, jnp.int32)), sp, cache)
+    assert chosen, "decode step dispatched no ternary matmuls"
+    assert all(d == "int8" for _, d in chosen), chosen
+    # both families (dense + grouped expert) dispatched through int8
+    assert any(dp.get_kernel(n).grouped for n, _ in chosen), chosen
+    assert any(not dp.get_kernel(n).grouped for n, _ in chosen), chosen

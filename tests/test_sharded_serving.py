@@ -28,8 +28,9 @@ def test_local_dense_tp_roles():
     info = ShardInfo(model=4, data=2, batch=2)
     # out-projection: N sharded; batch divides M
     assert info.local_dense("wi", 8, 128, 256) == (4, 128, 64)
-    # in-projection: K sharded
-    assert info.local_dense("wo", 8, 256, 128) == (4, 64, 128)
+    # in-projection: N sharded (column-parallel packed layout — the byte
+    # dim of a packed in-projection must stay whole, see sharding._IN_MODEL)
+    assert info.local_dense("wo", 8, 256, 128) == (4, 256, 32)
     # unknown role: replicated weight, only M shards
     assert info.local_dense(None, 8, 128, 256) == (4, 128, 256)
 
@@ -53,6 +54,16 @@ def test_local_dense_head_gating():
     # zero head counts = gate off (legacy flat-dim sharding)
     legacy = ShardInfo(model=4, data=1, batch=1)
     assert legacy.local_dense("wk", 2, 128, 32) == (2, 128, 8)
+
+
+def test_local_dense_no_tp_partial_replication():
+    """mamba2's wz gate projection only TPs on a pure-model mesh — under
+    partial replication (batch axes coexisting with model) it replicates
+    (sharding._NO_TP_ROLES), so N stays global."""
+    pure = ShardInfo(model=4, data=1, batch=1)
+    assert pure.local_dense("wz", 2, 128, 256) == (2, 128, 64)
+    mixed = ShardInfo(model=4, data=2, batch=1)
+    assert mixed.local_dense("wz", 2, 128, 256) == (2, 128, 256)
 
 
 def test_local_grouped_ep_tp():
@@ -249,10 +260,47 @@ def test_sharded_serve_matches_oracle_dense():
     assert all(len(s) == 6 for s in out["base"])
 
 
+def test_sharded_serve_matches_oracle_dense_model8():
+    """Pure-TP mesh (1x8): exact greedy-stream match at model=8.  This was
+    the long-open token-flip config — root cause was the packed
+    in-projection rule sharding the packed *byte* dim, which breaks the
+    base-3 unpack's logical-K slice at some shard widths (≈0.5 absolute
+    prefill-logit error).  The column-parallel packed layout (dout sharded)
+    is exact: no partial sums, so no reduce-order drift either."""
+    out = _run_oracle("bitnet-b1.58-2b", "1x8",
+                      {"n_layers": 2, "d_model": 128, "n_heads": 4,
+                       "n_kv_heads": 2, "head_dim": 32, "d_ff": 256,
+                       "vocab_size": 512})
+    assert out["sharded"] == out["base"], out
+    assert all(len(s) == 6 for s in out["base"])
+
+
 def test_sharded_serve_matches_oracle_moe():
     """MoE EP×TP mesh (2x4): expert stacks sharded E/2 on data with TP
     inside each expert, MQA kv replicated by the head gate — streams match
     the single-device oracle exactly."""
     out = _run_oracle("phi3.5-moe-42b-a6.6b", "2x4", {"n_layers": 2})
+    assert out["sharded"] == out["base"], out
+    assert all(len(s) == 6 for s in out["base"])
+
+
+def test_sharded_serve_matches_oracle_xlstm():
+    """xlstm TP mesh (2x4): the slstm ``ffn_up`` two-way GLU split and the
+    mlstm ``up`` split are segment-gated — their out dims replicate when the
+    split segments don't land whole on shards — so the downstream
+    ``jnp.split`` never slices through a sharded dim and the streams match
+    the single-device oracle exactly."""
+    out = _run_oracle("xlstm-125m", "2x4", {"n_layers": 2})
+    assert out["sharded"] == out["base"], out
+    assert all(len(s) == 6 for s in out["base"])
+
+
+def test_sharded_serve_matches_oracle_ssm():
+    """mamba2 (zamba2 backbone) TP mesh (2x4): three gates make the block
+    exact — ``wx`` (feeds the causal-conv concat, sliced back after) is
+    segment-gated, ``wz`` (elementwise gate projection) is replicated under
+    partial replication (``_NO_TP_ROLES``), and the SSM state cache stays
+    replicated — so streams match the single-device oracle exactly."""
+    out = _run_oracle("zamba2-2.7b", "2x4", {"n_layers": 2, "attn_every": 1})
     assert out["sharded"] == out["base"], out
     assert all(len(s) == 6 for s in out["base"])

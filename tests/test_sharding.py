@@ -134,7 +134,9 @@ def test_param_specs_golden_packed_moe(key):
     assert blocks["attn"]["wq"]["packed"] == P(None, "model", None)
     assert all(a is None for a in blocks["attn"]["wk"]["packed"])
     assert all(a is None for a in blocks["attn"]["wv"]["packed"])
-    assert blocks["attn"]["wo"]["packed"] == P(None, None, "model")
+    # packed wo [L, dout, din/5] is column-parallel (dout): sharding the
+    # packed byte dim breaks the base-3 unpack's logical-K slice
+    assert blocks["attn"]["wo"]["packed"] == P(None, "model", None)
 
 
 def test_cache_specs_kv_head_gated():
@@ -155,6 +157,17 @@ def test_cache_specs_kv_head_gated():
         P(None, ba, None, None, None)
     # legacy (no kv_heads): hd-dim sharding as before
     assert sh.cache_specs(kv, mesh)["k"] == P(None, ba, None, None, "model")
+
+
+def test_wz_partial_replication_gate():
+    """wz (mamba2's elementwise gate projection) is TP'd only on a
+    pure-model mesh; with a real batch axis alongside model it replicates
+    (sharding._NO_TP_ROLES — CPU SPMD partial-replication miscompile)."""
+    mixed = _abstract_mesh((2, 4), ("data", "model"))
+    pure = _abstract_mesh((1, 8), ("data", "model"))
+    path = ("blocks", "ssm", "wz", "w")
+    assert sh._param_spec(path, 2, mixed) == P()
+    assert sh._param_spec(path, 2, pure) == P(None, "model")
 
 
 def test_batch_size_one_replicated():
