@@ -18,15 +18,35 @@ prefill chunks, one compiled trace) and budgeted (``--admission-budget``
 chunks per scheduler step), so co-batched requests keep decoding while a
 long prompt is admitted and their TTFT stays bounded.
 
+With ``--prefix-cache`` the bench additionally runs the **shared-prefix
+workload** — N requests sharing a long system prompt, mixed with unique
+cold prompts, the traffic shape prefix caching exists for (cf. the
+``precise-prefix-cache-aware`` scenario in llm-d-benchmark) — twice: a cold
+engine with no store (recompute-from-scratch baseline) and a warm engine
+whose ``PrefixBlockStore`` was pre-populated by a full warmup pass.  It
+reports the block ``prefix_hit_rate`` of the measured warm pass, TTFT split
+by shared vs cold requests, the warm/cold shared-TTFT improvement, and the
+scheduler's per-request queue-wait summary (the fairness cost of
+cache-affinity admission reordering, measurable next to the TTFT it buys).
+
 Writes ``BENCH_serving.json`` (schema below) for CI to surface in PRs:
 
-  {"schema_version": 2, "arch": ..., "batch": ..., "workload": {...},
+  {"schema_version": 3, "arch": ..., "batch": ..., "workload": {...},
    "prefill_chunk": C, "admission_budget": k, "mesh": "1x8" | null,
    "generational": {"tokens": N, "seconds": s, "tok_s": r, "decode_steps": d,
                     "ttft_s": {"mean": m, "p50": p, "max": M}},
-   "continuous":   {... same keys, plus "admission_steps"/"sched_steps" ...},
+   "continuous":   {... same keys, plus "admission_steps"/"sched_steps"
+                    and "queue_wait_s" mean/p50/max ...},
    "speedup": continuous.tok_s / generational.tok_s,
-   "ttft_ratio": continuous.ttft_s.max / generational.ttft_s.max}
+   "ttft_ratio": continuous.ttft_s.max / generational.ttft_s.max,
+   "prefix": {"enabled": bool, ...with --prefix-cache:
+              "workload": {...}, "cold": {...}, "warm": {...},
+              "prefix_hit_rate": h, "ttft_improvement":
+              cold.shared_ttft_s.mean / warm.shared_ttft_s.mean}}
+
+Schema v3 is v2 plus the ``prefix`` section and the continuous path's
+``queue_wait_s`` — every v2 field is unchanged, so v2-era consumers (and
+the CI field-presence check, which accepts both) keep working on old files.
 
 ``decode_steps`` counts steps that ran a decode; the continuous path's
 admission-only steps (prompts still prefilling, nothing live to decode) are
@@ -73,6 +93,128 @@ def make_requests(n: int, short_new: int, long_new: int, long_every: int,
     return reqs
 
 
+def make_shared_prefix_requests(n: int, prefix_len: int, suffix_len: int,
+                                cold_every: int, cold_prompt_len: int,
+                                new_tokens: int, vocab: int,
+                                salt: int = 0) -> list[Request]:
+    """Prefix-cache traffic shape: most requests share one long system
+    prompt (plus a short unique suffix), every ``cold_every``-th request is
+    a unique cold prompt.  ``salt`` varies the *unique* parts between runs
+    so cold prompts never accidentally warm-hit across passes; the shared
+    prefix is deliberately salt-independent."""
+    shared = [2 + ((11 * j) % (vocab - 3)) for j in range(prefix_len)]
+    reqs = []
+    for i in range(n):
+        cold = cold_every > 0 and i % cold_every == cold_every - 1
+        if cold:
+            prompt = [2 + ((5 * (i + 131 * salt) + 3 * j) % (vocab - 3))
+                      for j in range(cold_prompt_len)]
+        else:
+            prompt = shared + [2 + ((7 * (i + 131 * salt) + j) % (vocab - 3))
+                               for j in range(suffix_len)]
+        r = Request(prompt=prompt, max_new_tokens=new_tokens)
+        r.shared = not cold  # bench-side tag for the TTFT split
+        reqs.append(r)
+    return reqs
+
+
+def _ttft_summary(vals: list[float]) -> dict:
+    vals = sorted(vals)
+    return {"mean": round(sum(vals) / len(vals), 4),
+            "p50": round(vals[len(vals) // 2], 4),
+            "max": round(vals[-1], 4)}
+
+
+def run_shared_prefix(engine: DecodeEngine, reqs: list[Request],
+                      admission_budget: int | None) -> dict:
+    """One pass of the shared-prefix workload with per-request TTFT split
+    by shared vs cold, plus the scheduler queue-wait summary."""
+    first_tok: dict[int, float] = {}
+
+    def stamp(req, tok):
+        first_tok.setdefault(id(req), time.perf_counter())
+
+    for r in reqs:
+        r.on_token = stamp
+    sched = ContinuousScheduler(engine, admission_budget=admission_budget)
+    for r in reqs:
+        sched.submit(r)
+    t0 = time.perf_counter()
+    sched.run(max_steps=100_000)
+    dt = time.perf_counter() - t0
+    ttft = {id(r): first_tok[id(r)] - t0 for r in reqs}
+    assert len(ttft) == len(reqs), "a request never emitted a first token"
+    return {"tokens": sum(len(r.out) for r in reqs),
+            "seconds": round(dt, 4),
+            "ttft_s": _ttft_summary(list(ttft.values())),
+            "shared_ttft_s": _ttft_summary(
+                [ttft[id(r)] for r in reqs if r.shared]),
+            "cold_ttft_s": _ttft_summary(
+                [ttft[id(r)] for r in reqs if not r.shared]),
+            "prefill_chunks": sched.stats.prefill_chunks,
+            "affinity_reorders": sched.stats.affinity_reorders,
+            "queue_wait_s": {k: round(v, 4) for k, v in
+                             sched.stats.queue_wait_summary().items()}}
+
+
+def bench_prefix(args, cfg, served, mesh, budget) -> dict:
+    """Shared-prefix workload, cold vs warm: a no-store engine (recompute
+    baseline) vs a prefix-cache engine whose store was populated by a full
+    warmup pass.  The measured warm pass's block hit rate and shared-request
+    TTFT improvement are the headline numbers."""
+    from repro.serving.prefix_cache import PrefixStoreStats
+
+    max_len = max(args.shared_prefix_len + args.shared_suffix_len,
+                  args.cold_prompt_len) + args.shared_new + 1
+
+    def mk(salt):
+        return make_shared_prefix_requests(
+            args.shared_requests, args.shared_prefix_len,
+            args.shared_suffix_len, args.cold_every, args.cold_prompt_len,
+            args.shared_new, cfg.vocab_size, salt=salt)
+
+    def engine(prefix_cache):
+        return DecodeEngine(served, cfg, batch_size=args.batch,
+                            max_len=max_len, matmul_policy=args.policy,
+                            prefill_chunk=args.prefill_chunk, mesh=mesh,
+                            prefix_cache=prefix_cache,
+                            prefix_cache_mb=args.prefix_cache_mb)
+
+    e_cold = engine(False)
+    run_shared_prefix(e_cold, mk(0), budget)  # warmup: compile
+    cold = run_shared_prefix(e_cold, mk(1), budget)
+
+    e_warm = engine(True)
+    run_shared_prefix(e_warm, mk(2), budget)  # warmup: compile + publish
+    e_warm.prefix_store.stats = PrefixStoreStats()  # measure one pass only
+    warm = run_shared_prefix(e_warm, mk(3), budget)
+    st = e_warm.prefix_store.stats
+
+    out = {"enabled": True,
+           "workload": {"requests": args.shared_requests,
+                        "shared_prefix_len": args.shared_prefix_len,
+                        "shared_suffix_len": args.shared_suffix_len,
+                        "cold_every": args.cold_every,
+                        "cold_prompt_len": args.cold_prompt_len,
+                        "shared_new": args.shared_new},
+           "cold": cold, "warm": warm,
+           "prefix_hit_rate": round(st.hit_rate, 4),
+           "hit_blocks": st.hit_blocks, "miss_blocks": st.miss_blocks,
+           "reused_tokens": st.reused_tokens,
+           "ttft_improvement": round(
+               cold["shared_ttft_s"]["mean"]
+               / max(warm["shared_ttft_s"]["mean"], 1e-9), 3)}
+    print(f"[serving_bench] shared-prefix cold: shared ttft mean "
+          f"{cold['shared_ttft_s']['mean']:.3f}s, cold-req mean "
+          f"{cold['cold_ttft_s']['mean']:.3f}s")
+    print(f"[serving_bench] shared-prefix warm: shared ttft mean "
+          f"{warm['shared_ttft_s']['mean']:.3f}s, hit rate "
+          f"{st.hit_rate:.0%} ({st.hit_blocks}/{st.lookups} blocks, "
+          f"{st.reused_tokens} tokens spliced), ttft improvement "
+          f"{out['ttft_improvement']:.2f}x")
+    return out
+
+
 def run_generational(engine: DecodeEngine, reqs: list[Request]) -> dict:
     """Seed baseline: batches of B run to the slowest request, sequentially."""
     steps = 0
@@ -94,7 +236,9 @@ def run_continuous(engine: DecodeEngine, reqs: list[Request],
     # an honest decode metric
     return {"decode_steps": sched.stats.decode_steps,
             "admission_steps": sched.stats.admission_steps,
-            "sched_steps": sched.stats.steps}
+            "sched_steps": sched.stats.steps,
+            "queue_wait_s": {k: round(v, 4) for k, v in
+                             sched.stats.queue_wait_summary().items()}}
 
 
 def bench(path_fn, engine, mk_reqs) -> dict:
@@ -145,6 +289,27 @@ def main():
                     "continuous path (0 = unbounded)")
     ap.add_argument("--policy", default="auto",
                     help="ternary-matmul dispatch policy for both paths")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="also run the shared-prefix workload cold vs warm "
+                    "and report prefix_hit_rate + shared-request TTFT "
+                    "improvement in a schema-v3 'prefix' section")
+    ap.add_argument("--prefix-cache-mb", type=float, default=64.0,
+                    help="prefix-cache byte budget in MiB (LRU eviction)")
+    ap.add_argument("--shared-requests", type=int, default=12,
+                    help="shared-prefix workload size")
+    ap.add_argument("--shared-prefix-len", type=int, default=96,
+                    help="length of the shared system prompt (reusable "
+                    "blocks = full --prefill-chunk multiples below this)")
+    ap.add_argument("--shared-suffix-len", type=int, default=2,
+                    help="unique per-request suffix after the shared prefix")
+    ap.add_argument("--cold-every", type=int, default=4,
+                    help="every k-th shared-prefix-workload request is a "
+                    "unique cold prompt (0 = all shared)")
+    ap.add_argument("--cold-prompt-len", type=int, default=48,
+                    help="prompt length of the cold requests")
+    ap.add_argument("--shared-new", type=int, default=4,
+                    help="tokens generated per shared-prefix-workload "
+                    "request (short: TTFT is the metric, not decode)")
     ap.add_argument("--mesh", default=None,
                     help="run both paths sharded over a DxM (data x model) "
                     "mesh, e.g. 1x8; axis product must equal the device "
@@ -174,7 +339,7 @@ def main():
                              args.long_prompt_len, args.long_prompt_every,
                              cfg.vocab_size)
 
-    results = {"schema_version": 2, "arch": cfg.name, "batch": args.batch,
+    results = {"schema_version": 3, "arch": cfg.name, "batch": args.batch,
                "policy": args.policy, "smoke": bool(args.smoke),
                "mesh": args.mesh,
                "prefill_chunk": args.prefill_chunk,
@@ -212,6 +377,8 @@ def main():
     print(f"[serving_bench] continuous / generational speedup: "
           f"{results['speedup']:.2f}x; worst-case ttft ratio: "
           f"{results['ttft_ratio']:.2f}")
+    results["prefix"] = (bench_prefix(args, cfg, served, mesh, budget)
+                         if args.prefix_cache else {"enabled": False})
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)
         f.write("\n")

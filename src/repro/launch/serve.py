@@ -9,7 +9,8 @@ Usage:
   python -m repro.launch.serve --arch bitnet-b1.58-2b --smoke \
       [--ckpt-dir DIR] [--batch 4] [--new-tokens 32] [--temperature 0.8] \
       [--discipline continuous|generational] [--stream] \
-      [--prefill-chunk 32] [--admission-budget 1] [--mesh 1x8]
+      [--prefill-chunk 32] [--admission-budget 1] [--mesh 1x8] \
+      [--prefix-cache] [--prefix-cache-mb 64]
 
 ``--mesh DxM`` (e.g. ``1x8``) serves sharded: packed ternary weights are
 tensor-parallel on the ``model`` axis and MoE expert stacks expert-parallel
@@ -69,6 +70,14 @@ def main():
                     help="serve sharded over a DxM (data x model) device "
                     "mesh, e.g. 1x8 (TP) or 2x4 (EP x TP); axis product "
                     "must equal the device count")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="hashed shared-prefix KV reuse: admission splices "
+                    "cached KV blocks (block = one --prefill-chunk) instead "
+                    "of recomputing them, publishes fresh blocks, and the "
+                    "scheduler admits cache-hot requests first (continuous "
+                    "only; chunked-admission archs)")
+    ap.add_argument("--prefix-cache-mb", type=float, default=64.0,
+                    help="prefix-cache byte budget in MiB (LRU eviction)")
     ap.add_argument("--act-dtype", choices=["none", "int8"], default="none",
                     help="activation dtype for the packed ternary "
                     "projections: int8 quantizes per token (absmax) in "
@@ -101,7 +110,9 @@ def main():
                           max_len=args.max_len,
                           sampler=SamplerConfig(temperature=args.temperature,
                                                 top_k=args.top_k),
-                          prefill_chunk=args.prefill_chunk, mesh=mesh)
+                          prefill_chunk=args.prefill_chunk, mesh=mesh,
+                          prefix_cache=args.prefix_cache,
+                          prefix_cache_mb=args.prefix_cache_mb)
     n_req = args.requests if args.requests is not None else args.batch
     reqs = [Request(prompt=[7 + i, 13 + i], max_new_tokens=args.new_tokens)
             for i in range(n_req)]
@@ -128,6 +139,12 @@ def main():
     n = sum(len(r.out) for r in reqs)
     print(f"[serve] {args.discipline}: {n} tokens / {steps} decode steps "
           f"in {dt:.1f}s ({n / dt:.1f} tok/s)")
+    if engine.prefix_store is not None:
+        st = engine.prefix_store.stats
+        print(f"[serve] prefix cache: {st.hit_blocks}/{st.lookups} block "
+              f"hits ({st.hit_rate:.0%}), {st.reused_tokens} prompt tokens "
+              f"spliced, {len(engine.prefix_store)} blocks resident "
+              f"({engine.prefix_store.nbytes >> 10} KiB)")
     for i, r in enumerate(reqs):
         print(f"  [{i}] {r.out}")
 

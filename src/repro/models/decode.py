@@ -584,6 +584,52 @@ def prefill_chunk(p: Params, cfg: ModelConfig, cache: dict,
     return cache, mask_padded_vocab(logits, cfg.vocab_size)
 
 
+def extract_kv_blocks(cfg: ModelConfig, cache: dict, start: jax.Array | int,
+                      length: int) -> dict:
+    """Pull one prefix block's KV out of a single-row cache: the slab
+    ``{"k": [L, length, Hkv, hd], "v": [L, length, Hkv, hd]}`` holding
+    positions ``[start, start + length)`` — read from their canonical ring
+    slots (``p % CL``), so the extraction is valid whenever those positions
+    are still live in the ring (the engine extracts each chunk right after
+    prefilling it, before any wraparound can overwrite it).
+
+    ``start`` may be traced (one jit trace serves every block index);
+    ``length`` is static (the slab shape).  Inverse of
+    :func:`splice_kv_blocks`.
+    """
+    CL = cache["pos"].shape[-1]
+    pos = jnp.asarray(start, jnp.int32) + jnp.arange(length, dtype=jnp.int32)
+    slots = _ring_slot(cfg, CL, pos)  # in-range by construction
+    return {"k": jnp.take(cache["k"][:, 0], slots, axis=1),
+            "v": jnp.take(cache["v"][:, 0], slots, axis=1)}
+
+
+def splice_kv_blocks(cfg: ModelConfig, cache: dict, block: dict,
+                     start: jax.Array | int) -> dict:
+    """Write a cached prefix block back into a single-row cache at the
+    canonical ring slots for positions ``[start, start + length)`` —
+    KV *and* the per-slot position row, so a subsequent chunked-prefill or
+    decode step sees exactly the state the original compute left behind
+    (byte-identical: the slab is spliced in its stored dtype, untouched).
+
+    Blocks must be spliced in prefix order: with a sliding window a later
+    block's slots may wrap onto an earlier block's (the engine caps reuse
+    depth at ``CL`` so this never happens, but the primitive stays correct
+    either way — later writes win, matching recompute).  Inverse of
+    :func:`extract_kv_blocks`.  Returns the updated cache.
+    """
+    CL = cache["pos"].shape[-1]
+    length = block["k"].shape[1]
+    pos = jnp.asarray(start, jnp.int32) + jnp.arange(length, dtype=jnp.int32)
+    slots = _ring_slot(cfg, CL, pos)
+    return dict(
+        cache,
+        k=cache["k"].at[:, 0, slots].set(block["k"].astype(cache["k"].dtype)),
+        v=cache["v"].at[:, 0, slots].set(block["v"].astype(cache["v"].dtype)),
+        pos=cache["pos"].at[:, 0, slots].set(pos),
+    )
+
+
 def prefill_chunks_of(plen: int, chunk: int) -> list[tuple[int, int]]:
     """Split a prompt of length ``plen`` into ``(start, valid)`` chunk specs
     (every chunk spans ``chunk`` tokens; the last may have ``valid < chunk``

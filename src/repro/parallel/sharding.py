@@ -293,6 +293,29 @@ def cache_specs(cache: Any, mesh: Mesh, *, kv_heads: int | None = None):
     return jax.tree_util.tree_map_with_path(spec, cache)
 
 
+def block_slab_specs(slab: Any, mesh: Mesh, *, kv_heads: int | None = None):
+    """Prefix-cache KV block slabs (``repro.serving.prefix_cache``):
+    ``{"k": [L, C, Hkv, hd], "v": [L, C, Hkv, hd]}`` — the single-row cache
+    leaves of :func:`cache_specs` minus the batch dim, sharded with the SAME
+    kv-head rule so the engine's jitted extract/splice move no bytes between
+    the admission cache layout and the stored slab: whole kv-heads on
+    ``model`` when ``kv_heads`` is given and divides the axis, else the
+    head_dim (legacy) or replication."""
+
+    def spec(x):
+        nd = getattr(x, "ndim", 0)
+        if nd == 4:                                # [L, C, Hkv, hd]
+            if kv_heads is not None:
+                s = P(None, None, "model", None)
+            else:
+                s = P(None, None, None, "model")
+        else:
+            s = P()
+        return _validate(s, getattr(x, "shape", ()), mesh)
+
+    return jax.tree.map(spec, slab)
+
+
 def batch_specs(batch: Any, mesh: Mesh):
     """Input batches: shard dim 0 (batch) over pod+data when divisible
     (long_500k has global_batch=1 → replicated; the data axis idles, which is

@@ -1,8 +1,10 @@
-"""repro.serving subsystem: the batched decode engine and the
-continuous-batching scheduler that drives it."""
+"""repro.serving subsystem: the batched decode engine, the
+continuous-batching scheduler that drives it, and the hashed shared-prefix
+KV block store admission reuses."""
 
 from repro.serving.engine import DecodeEngine, Request, SamplerConfig
+from repro.serving.prefix_cache import PrefixBlockStore, PrefixStoreStats
 from repro.serving.scheduler import ContinuousScheduler, ScheduleBackend
 
 __all__ = ["DecodeEngine", "Request", "SamplerConfig", "ContinuousScheduler",
-           "ScheduleBackend"]
+           "ScheduleBackend", "PrefixBlockStore", "PrefixStoreStats"]

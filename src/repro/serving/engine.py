@@ -18,6 +18,7 @@ The engine adds the serving substrate around the model's decode_step:
 
 from __future__ import annotations
 
+import logging
 from collections import Counter
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -36,6 +37,9 @@ from repro.models.decode import (
     prefill_chunks_of,
     supports_chunked_prefill,
 )
+
+
+logger = logging.getLogger(__name__)
 
 
 @dataclass
@@ -76,7 +80,8 @@ class DecodeEngine:
     def __init__(self, params, cfg: ModelConfig, *, batch_size: int,
                  max_len: int, sampler: SamplerConfig | None = None,
                  matmul_policy: str | None = None, prefill_chunk: int = 32,
-                 mesh=None):
+                 mesh=None, prefix_cache=False,
+                 prefix_cache_mb: float = 64.0):
         """``matmul_policy`` overrides ``cfg.matmul_policy`` for every ternary
         projection this engine executes ("auto" | "prior" | "fixed:<kernel>",
         see :mod:`repro.kernels.dispatch`).  Kernel selection happens once,
@@ -100,7 +105,19 @@ class DecodeEngine:
         maps each matmul to its per-device shard — autotune-cache keys and
         prior scores are derived from the *local* problem.  The scheduling
         protocol is unchanged: a ``ContinuousScheduler`` drives a sharded
-        engine exactly like a single-device one."""
+        engine exactly like a single-device one.
+
+        ``prefix_cache`` turns on hashed shared-prefix KV reuse: pass True
+        (a fresh :class:`repro.serving.prefix_cache.PrefixBlockStore` with a
+        ``prefix_cache_mb`` byte budget) or a store instance to share across
+        engines.  Admission then consults the store per prompt block
+        (block = one ``prefill_chunk``), splices cached KV slabs instead of
+        recomputing hit blocks, and publishes each freshly-computed full
+        block.  Only effective on chunked-admission architectures — the
+        whole-prompt fallback families carry recurrent state a KV slab
+        cannot capture — and on windowed configs reuse depth is capped at
+        the ring length (deeper blocks would be overwritten before the
+        prompt tail attends them)."""
         if matmul_policy is not None:
             cfg = cfg.with_(matmul_policy=matmul_policy)
         self.cfg = cfg
@@ -111,6 +128,9 @@ class DecodeEngine:
         self.prefill_chunk = max(1, min(prefill_chunk,
                                         cache_len(cfg, max_len)))
         self.chunked_admission = supports_chunked_prefill(params, cfg)
+        self._CL = cache_len(cfg, max_len)
+        self.prefix_store = self._make_prefix_store(prefix_cache,
+                                                    prefix_cache_mb)
         self.mesh = mesh
         #: per-entry-point trace-time shard geometry (mesh mode only).  The
         #: batch divisor differs per entry: the batched decode step shards
@@ -216,7 +236,85 @@ class DecodeEngine:
                 (getattr(self, "_psh", None), getattr(self, "_state_sh", None),
                  repl),
                 (getattr(self, "_state_sh", None), repl, repl)))
+        if self.prefix_store is not None:
+            # prefix-cache entry points: splice a stored KV slab into the
+            # single-row admission cache / extract a just-prefilled block
+            # for publication.  Both take the block start position as traced
+            # int32 — one trace serves every block index — and both are
+            # `_counted`, so the trace-honesty tests can assert cache HITS
+            # mint no new prefill traces.  The slab layout matches
+            # `sharding.block_slab_specs` in mesh mode (kv-head sharded
+            # alongside the cache), so splicing stays resident per shard.
+            from repro.models.decode import (extract_kv_blocks,
+                                             splice_kv_blocks)
+
+            C = self.prefill_chunk
+            slab_sh = None
+            if mesh is not None:
+                from repro.parallel import sharding as sh
+
+                slab_sds = jax.eval_shape(lambda: extract_kv_blocks(
+                    cfg, init_cache(cfg, 1, self.max_len), 0, C))
+                slab_sh = sh.to_shardings(
+                    sh.block_slab_specs(slab_sds, mesh,
+                                        kv_heads=cfg.n_kv_heads), mesh)
+                self._slab_sh = slab_sh
+            self._splice_block_fn = jax.jit(
+                self._counted("splice_block",
+                              lambda c, kb, vb, s: splice_kv_blocks(
+                                  cfg, c, {"k": kb, "v": vb}, s)),
+                donate_argnums=(0,),
+                **shardings(
+                    (getattr(self, "_cache1_sh", None),
+                     slab_sh["k"] if slab_sh else None,
+                     slab_sh["v"] if slab_sh else None, repl),
+                    getattr(self, "_cache1_sh", None)))
+            # the admission cache is NOT donated here: the caller keeps
+            # prefilling through it after the extraction
+            self._extract_block_fn = jax.jit(
+                self._counted("extract_block",
+                              lambda c, s: extract_kv_blocks(cfg, c, s, C)),
+                **shardings(
+                    (getattr(self, "_cache1_sh", None), repl), slab_sh))
         self._key = jax.random.PRNGKey(self.sampler.seed)
+
+    def _make_prefix_store(self, prefix_cache, prefix_cache_mb: float):
+        """Resolve the ``prefix_cache`` constructor arg into a
+        :class:`~repro.serving.prefix_cache.PrefixBlockStore` (or None).
+        The store's hash namespace binds the KV-producing geometry — config
+        name, depth, kv-head shape — so slabs can never be replayed across
+        engines whose caches they would not fit."""
+        # identity checks, not truthiness: an EMPTY store instance is falsy
+        # (len() == 0) but must still be wired in and validated
+        if prefix_cache is None or prefix_cache is False:
+            return None
+        if not self.chunked_admission:
+            logger.warning(
+                "prefix cache requested but %s admits through whole-prompt "
+                "fallback (no chunked prefill); prefix reuse disabled",
+                self.cfg.name)
+            return None
+        from repro.serving.prefix_cache import PrefixBlockStore
+
+        ns = (f"{self.cfg.name}:{self.cfg.n_layers}:{self.cfg.n_kv_heads}:"
+              f"{self.cfg.head_dim}:{self.cfg.d_model}").encode()
+        if prefix_cache is True:
+            return PrefixBlockStore(
+                self.prefill_chunk,
+                max_bytes=max(1, int(prefix_cache_mb * (1 << 20))),
+                namespace=ns)
+        store = prefix_cache
+        if store.block_tokens != self.prefill_chunk:
+            raise ValueError(
+                f"prefix store block size {store.block_tokens} != engine "
+                f"prefill_chunk {self.prefill_chunk}: blocks are admission "
+                f"chunks, the sizes must agree")
+        if store.namespace != ns:
+            raise ValueError(
+                "prefix store namespace mismatch: the store was built for a "
+                "different model geometry; sharing it would splice foreign "
+                "KV slabs")
+        return store
 
     def _counted(self, name: str, fn):
         """Wrap a to-be-jitted callable so each (re)trace bumps
@@ -468,7 +566,14 @@ class DecodeEngine:
 
         The in-flight prefill runs against a private single-row cache and is
         spliced into the live batch only on the final chunk, so decode steps
-        on the other rows proceed untouched throughout."""
+        on the other rows proceed untouched throughout.
+
+        With a prefix store, the store is consulted first: the longest
+        hashed-prefix run of cached blocks is spliced into the private cache
+        (jitted ``splice_block`` — NO prefill-chunk trace runs for a hit, so
+        ``trace_counts`` stays honest) and chunked prefill resumes at the
+        first miss.  The final chunk is always computed — the slot needs its
+        last-position logits, which no KV slab carries."""
         plen = self._validate_request(request)
         if not self.chunked_admission:
             return self._admit_whole(state, slot, request), None
@@ -482,26 +587,85 @@ class DecodeEngine:
             pos[0, :valid] = np.arange(start, start + valid)
             chunks.append((jnp.asarray(toks), jnp.asarray(pos),
                            jnp.asarray(valid - 1, jnp.int32)))
+        cache1 = init_cache(self.cfg, 1, self.max_len)
+        hits, hashes = 0, []
+        if self.prefix_store is not None:
+            store = self.prefix_store
+            hashes = store.block_hashes(prompt,
+                                        n_blocks=self._publishable_blocks(plen))
+            # reusable depth: full blocks strictly before the final chunk
+            # (the final chunk always recomputes for its logits); the
+            # publishable cap already bounded depth at the ring length
+            n_reusable = min(len(chunks) - 1, len(hashes))
+            hits = store.match(hashes[:n_reusable])
+            for i in range(hits):
+                slab = store.get(hashes[i])
+                cache1 = self._splice_block_fn(
+                    cache1, slab["k"], slab["v"],
+                    jnp.asarray(i * C, jnp.int32))
+            store.stats.reused_tokens += hits * C
         pending = {
             "request": request, "slot": slot, "plen": plen,
-            "chunks": chunks, "i": 0,
-            "cache": init_cache(self.cfg, 1, self.max_len),
+            "chunks": chunks, "i": hits, "hashes": hashes,
+            "cache": cache1,
         }
         return state, pending
+
+    def _publishable_blocks(self, plen: int) -> int:
+        """How many leading full blocks of a ``plen``-token prompt the
+        prefix store may hold: every full ``prefill_chunk`` block, capped on
+        windowed configs at the blocks fully inside the first ``CL``
+        positions — deeper blocks are overwritten in the ring before the
+        prompt's tail attends them, so their slabs could neither be
+        extracted after prefill-time wraparound nor spliced usefully."""
+        n_full = plen // self.prefill_chunk
+        if self.cfg.window:
+            n_full = min(n_full, self._CL // self.prefill_chunk)
+        return n_full
 
     def sched_admit_step(self, state: dict, pending: dict):
         """Advance an in-flight admission by one prompt chunk; on the final
         chunk splice the prefilled row into the live state and arm the slot.
-        Returns ``(state, pending | None)``."""
-        toks, pos, take = pending["chunks"][pending["i"]]
+        Returns ``(state, pending | None)``.
+
+        When a prefix store is attached, each freshly-computed full block
+        within reuse depth is extracted from the just-written ring slots and
+        published, so the next request sharing the prefix splices instead of
+        recomputing."""
+        i = pending["i"]
+        toks, pos, take = pending["chunks"][i]
         pending["cache"], logits1 = self._prefill_chunk_fn(
             self.params, pending["cache"], toks, pos, take)
+        if i < len(pending["hashes"]) and \
+                pending["hashes"][i] not in self.prefix_store:
+            slab = self._extract_block_fn(
+                pending["cache"],
+                jnp.asarray(i * self.prefill_chunk, jnp.int32))
+            self.prefix_store.put(pending["hashes"][i], slab)
         pending["i"] += 1
         if pending["i"] < len(pending["chunks"]):
             return state, pending
         state = self._commit(state, pending["slot"], pending["cache"],
                              logits1[0], pending["request"])
         return state, None
+
+    def prefix_match_len(self, request: Request) -> int:
+        """Cached-prefix depth for ``request`` in TOKENS — how much prefill
+        admission would skip right now.  A read-only probe (no LRU bump, no
+        hit/miss accounting): the scheduler calls this per queued request to
+        order admission by cache affinity, and a probe must not distort
+        eviction order or the measured admission hit rate.  0 without a
+        store."""
+        if self.prefix_store is None:
+            return 0
+        plen = len(request.prompt)
+        n_reusable = min((plen - 1) // self.prefill_chunk,
+                         self._publishable_blocks(plen))
+        if n_reusable <= 0:
+            return 0
+        hashes = self.prefix_store.block_hashes(request.prompt,
+                                                n_blocks=n_reusable)
+        return self.prefix_store.match(hashes, peek=True) * self.prefill_chunk
 
     def _admit_whole(self, state: dict, slot: int, request: Request) -> dict:
         """Whole-prompt fallback admission for architectures without

@@ -275,6 +275,75 @@ def test_sharded_serve_matches_oracle_dense_model8():
     assert all(len(s) == 6 for s in out["base"])
 
 
+_PREFIX_ORACLE_SCRIPT = textwrap.dedent("""
+    import json, sys
+    import jax
+    assert len(jax.devices()) == 8, jax.devices()
+    from repro.configs.registry import get_smoke_config
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models.decode import quantize_for_serving
+    from repro.models.model import init_params
+    from repro.serving.engine import DecodeEngine, Request
+    from repro.serving.scheduler import ContinuousScheduler
+
+    arch, mesh_spec, overrides = sys.argv[1], sys.argv[2], json.loads(sys.argv[3])
+    cfg = get_smoke_config(arch).with_(**overrides)
+    served = quantize_for_serving(init_params(cfg, jax.random.PRNGKey(1)), cfg)
+    shared = [3, 4, 5, 6, 7, 8, 9, 10, 11, 12]
+    specs = [(shared + [20 + i], 5) for i in range(3)] + [([9, 2, 4], 5)]
+
+    def serve_pass(eng):
+        reqs = [Request(prompt=p, max_new_tokens=n) for p, n in specs]
+        sched = ContinuousScheduler(eng, admission_budget=1)
+        for r in reqs:
+            sched.submit(r)
+        sched.run(max_steps=1000)
+        return [r.out for r in reqs]
+
+    def engine(mesh, prefix_cache):
+        return DecodeEngine(served, cfg, batch_size=2, max_len=64,
+                            matmul_policy="fixed:ref", prefill_chunk=4,
+                            mesh=mesh, prefix_cache=prefix_cache)
+
+    base = serve_pass(engine(make_serving_mesh(mesh_spec), False))
+    cached = engine(make_serving_mesh(mesh_spec), True)
+    cold = serve_pass(cached)    # publishes + intra-pass hits
+    warm = serve_pass(cached)    # hits everything publishable
+    st = cached.prefix_store.stats
+    print(json.dumps({"base": base, "cold": cold, "warm": warm,
+                      "hit_blocks": st.hit_blocks,
+                      "reused_tokens": st.reused_tokens,
+                      "traces": dict(cached.trace_counts)}))
+""")
+
+
+def test_sharded_prefix_cache_matches_oracle_1x8():
+    """Prefix-cache acceptance on a mesh: warm-store reuse on a 1x8 TP mesh
+    serves greedy streams byte-identical to the no-cache sharded engine —
+    slabs are extracted, stored, and spliced in the kv-head-sharded layout
+    (``block_slab_specs``), so reuse moves no bytes and changes no math —
+    and cache hits mint no extra jit traces."""
+    env = dict(os.environ,
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    overrides = {"n_layers": 2, "d_model": 128, "n_heads": 4,
+                 "n_kv_heads": 2, "head_dim": 32, "d_ff": 256,
+                 "vocab_size": 512}
+    proc = subprocess.run(
+        [sys.executable, "-c", _PREFIX_ORACLE_SCRIPT, "bitnet-b1.58-2b",
+         "1x8", json.dumps(overrides)],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["cold"] == out["base"], out
+    assert out["warm"] == out["base"], out
+    assert out["hit_blocks"] > 0 and out["reused_tokens"] > 0, out
+    assert out["traces"]["prefill_chunk"] == 1, out["traces"]
+    assert out["traces"]["splice_block"] == 1, out["traces"]
+
+
 def test_sharded_serve_matches_oracle_moe():
     """MoE EP×TP mesh (2x4): expert stacks sharded E/2 on data with TP
     inside each expert, MQA kv replicated by the head gate — streams match
