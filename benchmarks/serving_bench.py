@@ -29,12 +29,33 @@ by shared vs cold requests, the warm/cold shared-TTFT improvement, and the
 scheduler's per-request queue-wait summary (the fairness cost of
 cache-affinity admission reordering, measurable next to the TTFT it buys).
 
+With ``--draft <arch>`` the bench additionally runs the **speculative**
+section: a small ternary draft model proposes ``--spec-k - 1`` greedy
+continuations per round and the target verifies all candidates in one
+batched forward (``DecodeEngine(draft=..., spec_k=...)``).  The section is
+self-contained — the main workload is admission-heavy by design, so
+speculation (a decode optimization) runs its own decode-heavy workload
+through a **zero-tail twin** pair: a ≥8-layer target whose tail layers'
+output scales are zeroed post-quantization (exact no-ops — the deep model
+computes its 1-layer slice's function at full L-layer cost) and a draft
+that IS that first layer, so drafting is ~L× cheaper and acceptance is
+1.0 by construction.  Both a plain continuous baseline and the
+speculative engine run the same workload; the streams are compared
+byte-for-byte (greedy speculation must change *how many steps* the tokens
+take, never the tokens — dense verify is scatter-first bitwise-exact, and
+both engines use the canonical bf16-argmax greedy selection the
+speculative round is defined over) and the tok/s ratio is the per-round
+amortization win at the acceptance ceiling.  Real drafts accept less; the
+section is labeled ``twin_draft``.
+
 Writes ``BENCH_serving.json`` (schema below) for CI to surface in PRs:
 
-  {"schema_version": 3, "arch": ..., "batch": ..., "workload": {...},
+  {"schema_version": 4, "arch": ..., "batch": ..., "workload": {...},
    "prefill_chunk": C, "admission_budget": k, "mesh": "1x8" | null,
    "generational": {"tokens": N, "seconds": s, "tok_s": r, "decode_steps": d,
-                    "ttft_s": {"mean": m, "p50": p, "max": M}},
+                    "ttft_s": {"mean": m, "p50": p, "p95": q, "p99": Q,
+                               "max": M},
+                    "tpot_s": {... same percentile keys ...}},
    "continuous":   {... same keys, plus "admission_steps"/"sched_steps"
                     and "queue_wait_s" mean/p50/max ...},
    "speedup": continuous.tok_s / generational.tok_s,
@@ -42,11 +63,26 @@ Writes ``BENCH_serving.json`` (schema below) for CI to surface in PRs:
    "prefix": {"enabled": bool, ...with --prefix-cache:
               "workload": {...}, "cold": {...}, "warm": {...},
               "prefix_hit_rate": h, "ttft_improvement":
-              cold.shared_ttft_s.mean / warm.shared_ttft_s.mean}}
+              cold.shared_ttft_s.mean / warm.shared_ttft_s.mean},
+   "speculative": {"enabled": bool, ...with --draft:
+                   "draft": name, "spec_k": K, "twin_draft": true,
+                   "target_layers": L, "workload": {"requests": n,
+                   "new_tokens": t},
+                   "tokens"/"seconds"/"tok_s"/"decode_steps"/"ttft_s"/
+                   "tpot_s" as above, "spec_rounds": n,
+                   "acceptance_rate": a, "drafted_tokens": D,
+                   "accepted_drafted_tokens": A,
+                   "tokens_per_decode_step": tokens / decode_steps,
+                   "baseline_tok_s": r (the section's own non-spec run),
+                   "speedup": tok_s / baseline_tok_s,
+                   "byte_identical": spec stream == baseline stream}}
 
-Schema v3 is v2 plus the ``prefix`` section and the continuous path's
-``queue_wait_s`` — every v2 field is unchanged, so v2-era consumers (and
-the CI field-presence check, which accepts both) keep working on old files.
+Schema v4 is v3 plus the ``speculative`` section, ``ttft_s`` tail
+percentiles (p95/p99), and the per-request ``tpot_s``
+(time-per-output-token) summary; v3 was v2 plus the ``prefix`` section
+and the continuous path's ``queue_wait_s``.  Every pre-existing field is
+unchanged, so older consumers (and the CI field-presence check, which
+accepts v2+) keep working on old files.
 
 ``decode_steps`` counts steps that ran a decode; the continuous path's
 admission-only steps (prompts still prefilling, nothing live to decode) are
@@ -72,7 +108,7 @@ import jax
 from repro.configs.registry import get_smoke_config
 from repro.models.decode import quantize_for_serving
 from repro.models.model import init_params
-from repro.serving.engine import DecodeEngine, Request
+from repro.serving.engine import DecodeEngine, Request, SamplerConfig
 from repro.serving.scheduler import ContinuousScheduler
 
 
@@ -119,10 +155,32 @@ def make_shared_prefix_requests(n: int, prefix_len: int, suffix_len: int,
 
 
 def _ttft_summary(vals: list[float]) -> dict:
+    """mean/p50/p95/p99/max over per-request latencies (TTFT or TPOT) —
+    tail percentiles included because speculation (and admission budgeting)
+    claims are about the tail, not the mean.  Percentiles use the
+    nearest-rank index on the sorted sample (exact for small n)."""
     vals = sorted(vals)
-    return {"mean": round(sum(vals) / len(vals), 4),
-            "p50": round(vals[len(vals) // 2], 4),
+    n = len(vals)
+
+    def pct(p):
+        return vals[min(n - 1, int(p * n))]
+
+    return {"mean": round(sum(vals) / n, 4),
+            "p50": round(pct(0.50), 4),
+            "p95": round(pct(0.95), 4),
+            "p99": round(pct(0.99), 4),
             "max": round(vals[-1], 4)}
+
+
+def _tpot_summary(token_times: dict[int, list[float]]) -> dict:
+    """Per-request TPOT (time per output token: emission span / (n - 1))
+    summarized across requests; single-token requests carry no inter-token
+    gap and are excluded.  Speculative rounds emit their accepted window in
+    one burst — those tokens share a timestamp, which is exactly the point:
+    TPOT measures what a streaming client observes."""
+    tpots = [(ts[-1] - ts[0]) / (len(ts) - 1)
+             for ts in token_times.values() if len(ts) > 1]
+    return _ttft_summary(tpots) if tpots else {}
 
 
 def run_shared_prefix(engine: DecodeEngine, reqs: list[Request],
@@ -132,7 +190,7 @@ def run_shared_prefix(engine: DecodeEngine, reqs: list[Request],
     first_tok: dict[int, float] = {}
 
     def stamp(req, tok):
-        first_tok.setdefault(id(req), time.perf_counter())
+        first_tok.setdefault(req.rid, time.perf_counter())
 
     for r in reqs:
         r.on_token = stamp
@@ -142,15 +200,15 @@ def run_shared_prefix(engine: DecodeEngine, reqs: list[Request],
     t0 = time.perf_counter()
     sched.run(max_steps=100_000)
     dt = time.perf_counter() - t0
-    ttft = {id(r): first_tok[id(r)] - t0 for r in reqs}
+    ttft = {r.rid: first_tok[r.rid] - t0 for r in reqs}
     assert len(ttft) == len(reqs), "a request never emitted a first token"
     return {"tokens": sum(len(r.out) for r in reqs),
             "seconds": round(dt, 4),
             "ttft_s": _ttft_summary(list(ttft.values())),
             "shared_ttft_s": _ttft_summary(
-                [ttft[id(r)] for r in reqs if r.shared]),
+                [ttft[r.rid] for r in reqs if r.shared]),
             "cold_ttft_s": _ttft_summary(
-                [ttft[id(r)] for r in reqs if not r.shared]),
+                [ttft[r.rid] for r in reqs if not r.shared]),
             "prefill_chunks": sched.stats.prefill_chunks,
             "affinity_reorders": sched.stats.affinity_reorders,
             "queue_wait_s": {k: round(v, 4) for k, v in
@@ -234,20 +292,31 @@ def run_continuous(engine: DecodeEngine, reqs: list[Request],
     # decode_steps counts steps that ran a decode; admission-only steps
     # (all slots still prefilling) are tallied separately so tok/step stays
     # an honest decode metric
-    return {"decode_steps": sched.stats.decode_steps,
-            "admission_steps": sched.stats.admission_steps,
-            "sched_steps": sched.stats.steps,
-            "queue_wait_s": {k: round(v, 4) for k, v in
-                             sched.stats.queue_wait_summary().items()}}
+    out = {"decode_steps": sched.stats.decode_steps,
+           "admission_steps": sched.stats.admission_steps,
+           "sched_steps": sched.stats.steps,
+           "queue_wait_s": {k: round(v, 4) for k, v in
+                            sched.stats.queue_wait_summary().items()}}
+    if sched.stats.spec_rounds:
+        out.update(
+            spec_rounds=sched.stats.spec_rounds,
+            drafted_tokens=sched.stats.drafted_tokens,
+            accepted_drafted_tokens=sched.stats.accepted_drafted_tokens,
+            acceptance_rate=round(sched.stats.acceptance_rate, 4))
+    return out
 
 
-def bench(path_fn, engine, mk_reqs) -> dict:
+def bench(path_fn, engine, mk_reqs) -> tuple[dict, list[list[int]]]:
+    """Measure one batching path: warmup pass (compile), then a timed pass
+    with per-token timestamps keyed on ``Request.rid``.  Returns the metric
+    dict AND the emitted token streams in request order — the speculative
+    section's byte-identity gate compares streams across paths."""
     path_fn(engine, mk_reqs())  # warmup: compile prefill chunks + decode step
     reqs = mk_reqs()
-    first_tok: dict[int, float] = {}
+    token_times: dict[int, list[float]] = {}
 
     def stamp(req, tok):
-        first_tok.setdefault(id(req), time.perf_counter())
+        token_times.setdefault(req.rid, []).append(time.perf_counter())
 
     for r in reqs:
         r.on_token = stamp
@@ -256,13 +325,128 @@ def bench(path_fn, engine, mk_reqs) -> dict:
     dt = time.perf_counter() - t0
     tokens = sum(len(r.out) for r in reqs)
     assert all(r.done or len(r.out) == r.max_new_tokens for r in reqs)
-    ttft = sorted(first_tok[id(r)] - t0 for r in reqs if id(r) in first_tok)
+    ttft = [token_times[r.rid][0] - t0 for r in reqs if r.rid in token_times]
     assert len(ttft) == len(reqs), "a request never emitted a first token"
-    return {"tokens": tokens, "seconds": round(dt, 4),
-            "tok_s": round(tokens / dt, 2), **step_stats,
-            "ttft_s": {"mean": round(sum(ttft) / len(ttft), 4),
-                       "p50": round(ttft[len(ttft) // 2], 4),
-                       "max": round(ttft[-1], 4)}}
+    return ({"tokens": tokens, "seconds": round(dt, 4),
+             "tok_s": round(tokens / dt, 2), **step_stats,
+             "ttft_s": _ttft_summary(ttft),
+             "tpot_s": _tpot_summary(token_times)},
+            [list(r.out) for r in reqs])
+
+
+def _zero_tail_wo(d: dict, under_wo: bool = False) -> dict:
+    """Zero the ``wo``-projection scales of every layer but the first, on a
+    stacked-blocks param tree.  A packed ternary projection contributes
+    ``scale * (packed_matmul)`` to the residual stream, so zeroed tail
+    scales make layers 1..L-1 exact no-ops: the L-layer model *computes the
+    same function* as its 1-layer slice while paying L layers of real
+    ternary compute."""
+    out = {}
+    for k, v in d.items():
+        if isinstance(v, dict):
+            out[k] = _zero_tail_wo(v, under_wo=(k == "wo"))
+        elif under_wo and k == "scale":
+            out[k] = v.at[1:].set(0)
+        else:
+            out[k] = v
+    return out
+
+
+def make_spec_pair(args, cfg):
+    """Build the speculative section's (target, draft) pair: a **zero-tail
+    function twin**.
+
+    The target is the bench config deepened to at least 8 layers, with the
+    attention/FFN output scales of layers 1..L-1 zeroed after quantization —
+    those layers' residual deltas are exactly 0.0, so the deep target
+    computes the same function as its first layer alone while paying the
+    full L-layer decode cost.  The draft is literally the target's first
+    layer (``blocks`` sliced to ``[:1]``, shared embed/lm_head/final_norm)
+    under the ``--draft`` arch's registry name, so drafting is ~L× cheaper
+    than a target step and every greedy proposal matches the target's
+    argmax — acceptance is 1.0 *by construction*.
+
+    This makes the section a measurement of the speculative machinery's
+    per-round amortization ceiling (fused K-token verify vs K sequential
+    decode steps) and of the byte-identity guarantee, NOT of a realistic
+    draft/target acceptance rate — real drafts accept less and the speedup
+    scales with their acceptance.  The output is labeled ``twin_draft`` so
+    downstream consumers can't mistake it for a trained-draft result."""
+    from repro.configs.registry import get_config
+
+    scfg = cfg.with_(n_layers=max(cfg.n_layers, 8))
+    sparams = quantize_for_serving(init_params(scfg, jax.random.PRNGKey(0)),
+                                   scfg)
+    sparams = dict(sparams, blocks=_zero_tail_wo(sparams["blocks"]))
+    dparams = dict(sparams,
+                   blocks=jax.tree.map(lambda x: x[:1], sparams["blocks"]))
+    # structural knobs stay the target's (the sliced params must parse);
+    # the registry lookup resolves module-style aliases (qwen3_0p6b)
+    dcfg = scfg.with_(n_layers=1, name=get_config(args.draft).name)
+    return scfg, sparams, dparams, dcfg
+
+
+def bench_speculative(args, cfg, mesh) -> dict:
+    """Speculative continuous serving vs its own non-speculative baseline.
+
+    Self-contained by design: the doubly-skewed main workload is admission-
+    heavy (most requests generate 2 tokens), which would measure prefill
+    overlap rather than speculation.  This section instead runs a
+    decode-heavy workload (``--spec-requests`` × ``--spec-new`` tokens,
+    short varied prompts) through TWO fresh engines built on the zero-tail
+    twin pair (:func:`make_spec_pair`) — one plain continuous, one
+    speculative — and reports: tok/s for both, acceptance rate, tokens per
+    decode step (the claim: ≈ spec_k — each round retires its accepted
+    window through ONE fused draft+verify+rollback call), and byte-identity
+    of the greedy streams (must be True: dense verify is scatter-first
+    exact, so speculation changes how many steps the tokens take, never the
+    tokens)."""
+    import numpy as np
+
+    scfg, sparams, dparams, dcfg = make_spec_pair(args, cfg)
+    rng = np.random.default_rng(0)
+    prompts = [[int(t) for t in rng.integers(2, scfg.vocab_size - 2,
+                                             int(rng.integers(4, 11)))]
+               for _ in range(args.spec_requests)]
+    max_len = max(len(p) for p in prompts) + args.spec_new + 1
+    max_len = -(-max_len // 16) * 16
+
+    def mk_spec_reqs():
+        return [Request(prompt=list(p), max_new_tokens=args.spec_new)
+                for p in prompts]
+
+    runs = {}
+    outs = {}
+    for name, draft in (("baseline", None), ("spec", (dparams, dcfg))):
+        # canonical (bf16-argmax) greedy on BOTH engines: the speculative
+        # round always selects canonically, so the baseline must too for
+        # the streams to be byte-comparable
+        engine = DecodeEngine(sparams, scfg, batch_size=args.batch,
+                              max_len=max_len, matmul_policy=args.policy,
+                              prefill_chunk=args.prefill_chunk, mesh=mesh,
+                              sampler=SamplerConfig(canonical_greedy=True),
+                              draft=draft,
+                              spec_k=args.spec_k if draft else 2)
+        runs[name], outs[name] = bench(
+            lambda e, r: run_continuous(e, r), engine, mk_spec_reqs)
+    spec = runs["spec"]
+    out = {"enabled": True, "draft": dcfg.name, "spec_k": args.spec_k,
+           "twin_draft": True, "target_layers": scfg.n_layers,
+           "workload": {"requests": args.spec_requests,
+                        "new_tokens": args.spec_new}, **spec,
+           "tokens_per_decode_step": round(
+               spec["tokens"] / max(spec["decode_steps"], 1), 3),
+           "baseline_tok_s": runs["baseline"]["tok_s"],
+           "speedup": round(spec["tok_s"] / runs["baseline"]["tok_s"], 3),
+           "byte_identical": outs["spec"] == outs["baseline"]}
+    print(f"[serving_bench]  speculative: {spec['tokens']} tok in "
+          f"{spec['seconds']:.2f}s = {spec['tok_s']:.1f} tok/s vs baseline "
+          f"{out['baseline_tok_s']:.1f} tok/s ({spec['decode_steps']} decode "
+          f"steps, {out['tokens_per_decode_step']:.2f} tok/step, acceptance "
+          f"{spec.get('acceptance_rate', 0.0):.0%}, speedup "
+          f"{out['speedup']:.2f}x, byte-identical: "
+          f"{out['byte_identical']})")
+    return out
 
 
 def main():
@@ -310,6 +494,21 @@ def main():
     ap.add_argument("--shared-new", type=int, default=4,
                     help="tokens generated per shared-prefix-workload "
                     "request (short: TTFT is the metric, not decode)")
+    ap.add_argument("--draft", default=None,
+                    help="draft arch name for speculative decoding (registry "
+                    "name or module alias, e.g. qwen3_0p6b); adds the "
+                    "schema-v4 'speculative' section — a decode-heavy "
+                    "workload through a zero-tail twin target/draft pair, "
+                    "spec vs non-spec, gated byte-identical (tests the "
+                    "machinery and amortization ceiling, not draft quality)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="candidates per speculative verify step (1 free "
+                    "target token + spec-k - 1 drafted)")
+    ap.add_argument("--spec-requests", type=int, default=8,
+                    help="speculative-section workload size")
+    ap.add_argument("--spec-new", type=int, default=48,
+                    help="tokens generated per speculative-section request "
+                    "(decode-heavy: speculation is a decode optimization)")
     ap.add_argument("--mesh", default=None,
                     help="run both paths sharded over a DxM (data x model) "
                     "mesh, e.g. 1x8; axis product must equal the device "
@@ -339,7 +538,7 @@ def main():
                              args.long_prompt_len, args.long_prompt_every,
                              cfg.vocab_size)
 
-    results = {"schema_version": 3, "arch": cfg.name, "batch": args.batch,
+    results = {"schema_version": 4, "arch": cfg.name, "batch": args.batch,
                "policy": args.policy, "smoke": bool(args.smoke),
                "mesh": args.mesh,
                "prefill_chunk": args.prefill_chunk,
@@ -354,6 +553,7 @@ def main():
     paths = [("generational", run_generational),
              ("continuous",
               lambda e, r: run_continuous(e, r, admission_budget=budget))]
+    outs: dict[str, list[list[int]]] = {}
     for name, fn in paths:
         # fresh engine per path: identical PRNG/jit state, no cross-warming
         engine = DecodeEngine(served, cfg, batch_size=args.batch,
@@ -362,7 +562,7 @@ def main():
         # record the EFFECTIVE chunk (the engine clamps to the ring length
         # on windowed configs), not the requested flag
         results["prefill_chunk"] = engine.prefill_chunk
-        results[name] = bench(fn, engine, mk_reqs)
+        results[name], outs[name] = bench(fn, engine, mk_reqs)
         r = results[name]
         print(f"[serving_bench] {name:>12}: {r['tokens']} tok in "
               f"{r['seconds']:.2f}s = {r['tok_s']:.1f} tok/s "
@@ -379,6 +579,8 @@ def main():
           f"{results['ttft_ratio']:.2f}")
     results["prefix"] = (bench_prefix(args, cfg, served, mesh, budget)
                          if args.prefix_cache else {"enabled": False})
+    results["speculative"] = (bench_speculative(args, cfg, mesh)
+                              if args.draft else {"enabled": False})
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)
         f.write("\n")

@@ -36,10 +36,23 @@ ARCHS: dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
 ASSIGNED = [n for n in ARCHS if n != "bitnet-b1.58-2b"]
 
 
+def _resolve(name: str) -> str:
+    """Accept module-style aliases for registry names: ``qwen3_0p6b`` →
+    ``qwen3-0.6b`` (underscores are hyphens, ``p`` between digits is a
+    decimal point) — so CLI flags can name archs the way the config modules
+    do."""
+    if name in ARCHS:
+        return name
+    import re
+
+    cand = re.sub(r"(?<=\d)p(?=\d)", ".", name.replace("_", "-"))
+    if cand in ARCHS:
+        return cand
+    raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+
+
 def get_config(name: str) -> ModelConfig:
-    if name not in ARCHS:
-        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
-    return ARCHS[name]
+    return ARCHS[_resolve(name)]
 
 
 def get_smoke_config(name: str, **overrides) -> ModelConfig:

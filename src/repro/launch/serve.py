@@ -10,7 +10,20 @@ Usage:
       [--ckpt-dir DIR] [--batch 4] [--new-tokens 32] [--temperature 0.8] \
       [--discipline continuous|generational] [--stream] \
       [--prefill-chunk 32] [--admission-budget 1] [--mesh 1x8] \
-      [--prefix-cache] [--prefix-cache-mb 64]
+      [--prefix-cache] [--prefix-cache-mb 64] \
+      [--draft qwen3-0.6b] [--spec-k 4]
+
+``--draft <arch>`` turns on draft-and-verify speculative decoding on the
+continuous path: the (replicated, randomly-initialized here — pass a real
+draft checkpoint in deployment) draft model proposes ``--spec-k - 1``
+greedy continuations per scheduler step and the target verifies all
+candidates in one batched forward, emitting the accepted window.  Greedy
+streams are byte-identical to non-speculative serving under the canonical
+(bf16-argmax) greedy selection the speculative round is defined over
+(``SamplerConfig(canonical_greedy=True)`` on the non-spec engine; on dense
+caches the verify forward itself is scatter-first bitwise-exact); the
+draft and target must share a tokenizer/vocab (the engine raises
+ValueError otherwise) and ``--temperature`` must stay 0.
 
 ``--mesh DxM`` (e.g. ``1x8``) serves sharded: packed ternary weights are
 tensor-parallel on the ``model`` axis and MoE expert stacks expert-parallel
@@ -78,6 +91,13 @@ def main():
                     "only; chunked-admission archs)")
     ap.add_argument("--prefix-cache-mb", type=float, default=64.0,
                     help="prefix-cache byte budget in MiB (LRU eviction)")
+    ap.add_argument("--draft", default=None,
+                    help="draft arch for speculative decoding (continuous "
+                    "only, greedy only; must share the target's "
+                    "tokenizer/vocab — mismatches raise ValueError)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="candidates per speculative verify step (1 free "
+                    "target token + spec-k - 1 drafted)")
     ap.add_argument("--act-dtype", choices=["none", "int8"], default="none",
                     help="activation dtype for the packed ternary "
                     "projections: int8 quantizes per token (absmax) in "
@@ -106,13 +126,27 @@ def main():
         mesh = make_serving_mesh(args.mesh)
         print(f"[serve] mesh {args.mesh}: "
               f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    draft = None
+    if args.draft:
+        if args.discipline != "continuous":
+            raise SystemExit("[serve] --draft requires --discipline "
+                             "continuous (the generational path ignores "
+                             "the draft)")
+        dcfg = (get_smoke_config(args.draft) if args.smoke
+                else get_config(args.draft))
+        draft_params = quantize_for_serving(
+            init_params(dcfg, jax.random.PRNGKey(1)), dcfg)
+        print(f"[serve] draft {dcfg.name}: spec_k={args.spec_k}, packed "
+              f"{packed_bits_per_weight(draft_params):.3f} b/w")
+        draft = (draft_params, dcfg)
     engine = DecodeEngine(served, cfg, batch_size=args.batch,
                           max_len=args.max_len,
                           sampler=SamplerConfig(temperature=args.temperature,
                                                 top_k=args.top_k),
                           prefill_chunk=args.prefill_chunk, mesh=mesh,
                           prefix_cache=args.prefix_cache,
-                          prefix_cache_mb=args.prefix_cache_mb)
+                          prefix_cache_mb=args.prefix_cache_mb,
+                          draft=draft, spec_k=args.spec_k)
     n_req = args.requests if args.requests is not None else args.batch
     reqs = [Request(prompt=[7 + i, 13 + i], max_new_tokens=args.new_tokens)
             for i in range(n_req)]
@@ -125,8 +159,8 @@ def main():
         engine.run(reqs)
         steps = max(len(r.out) for r in reqs)
     else:
-        ids = {id(r): i for i, r in enumerate(reqs)}
-        on_token = (lambda r, t: print(f"  [stream] req {ids[id(r)]}: {t}")) \
+        ids = {r.rid: i for i, r in enumerate(reqs)}
+        on_token = (lambda r, t: print(f"  [stream] req {ids[r.rid]}: {t}")) \
             if args.stream else None
         budget = args.admission_budget if args.admission_budget > 0 else None
         sched = ContinuousScheduler(engine, on_token=on_token,
@@ -139,6 +173,12 @@ def main():
     n = sum(len(r.out) for r in reqs)
     print(f"[serve] {args.discipline}: {n} tokens / {steps} decode steps "
           f"in {dt:.1f}s ({n / dt:.1f} tok/s)")
+    if args.draft and args.discipline == "continuous":
+        st = sched.stats
+        print(f"[serve] speculative: {st.spec_rounds} rounds, "
+              f"{st.accepted_drafted_tokens}/{st.drafted_tokens} drafted "
+              f"tokens accepted ({st.acceptance_rate:.0%}), "
+              f"{n / max(st.decode_steps, 1):.2f} tok/decode-step")
     if engine.prefix_store is not None:
         st = engine.prefix_store.stats
         print(f"[serve] prefix cache: {st.hit_blocks}/{st.lookups} block "

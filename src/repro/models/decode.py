@@ -517,6 +517,91 @@ def supports_chunked_prefill(p: Params, cfg: ModelConfig) -> bool:
     return True
 
 
+def _chunk_forward(p: Params, cfg: ModelConfig, cache: dict,
+                   tokens: jax.Array, positions: jax.Array,
+                   exact: bool = False):
+    """Shared body of :func:`prefill_chunk` and :func:`verify_step`: run a
+    ``[B, C]`` token chunk at per-row absolute ``positions`` through a
+    uniform attention stack, attending the already-written ring (read-only)
+    plus the chunk itself via
+    :func:`repro.models.layers.append_attention`, then scatter the chunk's
+    KV at the canonical ring slots (``p % CL``).  Positions of ``-1`` (dead
+    rows, padded tails) neither write KV nor match any query.  Returns
+    ``(cache, h [B, C, d_model])`` with ``h`` already final-norm'd.
+
+    ``exact`` (dense caches only) switches attention to the scatter-first
+    form: each layer writes the chunk's KV into its ring slots *before*
+    attending, the ring scan is masked strictly below each query, and the
+    chunk merges self-only as the extra online-softmax partition.  Every
+    chunk position then reproduces the attended set, partition boundaries,
+    and reduction order of a sequential :func:`decode_step` at that position
+    — so the returned hidden states (and the KV left in the cache) are
+    *bitwise* what C sequential decode steps would have produced.  This is
+    what lets speculative verify guarantee byte-identical greedy streams.
+    Windowed caches cannot use it (the pre-scatter would evict in-window
+    keys that earlier chunk positions still attend) and keep the standard
+    read-only form, which is positionally exact but may differ from
+    sequential decode in the last bits of the softmax reduction.
+    """
+    if not supports_chunked_prefill(p, cfg):
+        raise NotImplementedError(
+            f"chunked prefill not supported for {cfg.name} "
+            f"(block_pattern={cfg.block_pattern}); use prefill()")
+    from repro.models.layers import append_attention
+
+    B, C = tokens.shape
+    CL = cache["pos"].shape[-1]
+    if cfg.window and C > CL:
+        raise ValueError(
+            f"chunk size {C} exceeds ring length {CL}: a single chunk would "
+            f"collide with itself in the ring; use chunks <= the window")
+    if exact and cfg.window:
+        raise ValueError(
+            "exact (scatter-first) chunk forward requires a dense cache: a "
+            "wrapped ring would pre-evict in-window keys that earlier chunk "
+            "positions still attend")
+    positions = jnp.asarray(positions, jnp.int32)
+    slot = _ring_slot(cfg, CL, positions)  # [B, C]; padded tail drops
+    rows = jnp.arange(B)
+    h = embed_tokens(p, cfg, tokens)
+    old_pos = cache["pos"][0]  # [B, CL] pre-chunk positions (-1 = empty)
+    # exact mode scatters positions up front: queries see chunk-mates' slots
+    k_pos = (old_pos.at[rows[:, None], slot].set(positions) if exact
+             else old_pos)
+
+    def body(x, xs):
+        blk, ck, cv = xs
+        hn = rms_norm(blk["ln1"], x, offset=cfg.rmsnorm_offset)
+        a, (k, v) = append_attention(blk["attn"], hn, cfg, positions=positions,
+                                     cache_k=ck, cache_v=cv,
+                                     k_positions=k_pos, window=cfg.window,
+                                     scatter_slots=slot if exact else None)
+        x = x + a
+        hn = rms_norm(blk["ln2"], x, offset=cfg.rmsnorm_offset)
+        if cfg.n_experts:
+            f, _ = moe_ffn(blk["moe"], hn, cfg)
+        else:
+            f = ffn(blk["ffn"], hn, cfg)
+        return x + f, (k, v)
+
+    h, (k_new, v_new) = jax.lax.scan(body, h, (p["blocks"], cache["k"],
+                                               cache["v"]))
+    if exact:
+        # each layer already scattered its chunk KV pre-attention; the scan
+        # ys stack IS the new cache
+        new_pos = cache["pos"].at[:, rows[:, None], slot].set(positions)
+        cache = dict(cache, k=k_new, v=v_new, pos=new_pos)
+    else:
+        # one batched scatter per leaf: all layers' chunk tokens at their
+        # canonical slots (padded positions target slot CL and drop)
+        ks = cache["k"].at[:, rows[:, None], slot].set(k_new.astype(cache["k"].dtype))
+        vs = cache["v"].at[:, rows[:, None], slot].set(v_new.astype(cache["v"].dtype))
+        new_pos = cache["pos"].at[:, rows[:, None], slot].set(positions)
+        cache = dict(cache, k=ks, v=vs, pos=new_pos)
+    h = rms_norm(p["final_norm"], h, offset=cfg.rmsnorm_offset)
+    return cache, h
+
+
 def prefill_chunk(p: Params, cfg: ModelConfig, cache: dict,
                   tokens: jax.Array, positions: jax.Array,
                   take: jax.Array | int | None = None):
@@ -538,50 +623,106 @@ def prefill_chunk(p: Params, cfg: ModelConfig, cache: dict,
     (default C-1; pass the last *valid* index for a padded final chunk).
     Returns (cache, logits [B, V]).
     """
-    if not supports_chunked_prefill(p, cfg):
-        raise NotImplementedError(
-            f"chunked prefill not supported for {cfg.name} "
-            f"(block_pattern={cfg.block_pattern}); use prefill()")
-    from repro.models.layers import append_attention, mask_padded_vocab
+    from repro.models.layers import mask_padded_vocab
 
-    B, C = tokens.shape
-    CL = cache["pos"].shape[-1]
-    if cfg.window and C > CL:
-        raise ValueError(
-            f"chunk size {C} exceeds ring length {CL}: a single chunk would "
-            f"collide with itself in the ring; use chunks <= the window")
-    positions = jnp.asarray(positions, jnp.int32)
-    slot = _ring_slot(cfg, CL, positions)  # [B, C]; padded tail drops
-    rows = jnp.arange(B)
+    C = tokens.shape[1]
     take = C - 1 if take is None else take
-    h = embed_tokens(p, cfg, tokens)
-    old_pos = cache["pos"][0]  # [B, CL] pre-chunk positions (-1 = empty)
-
-    def body(x, xs):
-        blk, ck, cv = xs
-        hn = rms_norm(blk["ln1"], x, offset=cfg.rmsnorm_offset)
-        a, (k, v) = append_attention(blk["attn"], hn, cfg, positions=positions,
-                                     cache_k=ck, cache_v=cv,
-                                     k_positions=old_pos, window=cfg.window)
-        x = x + a
-        hn = rms_norm(blk["ln2"], x, offset=cfg.rmsnorm_offset)
-        if cfg.n_experts:
-            f, _ = moe_ffn(blk["moe"], hn, cfg)
-        else:
-            f = ffn(blk["ffn"], hn, cfg)
-        return x + f, (k, v)
-
-    h, (k_new, v_new) = jax.lax.scan(body, h, (p["blocks"], cache["k"],
-                                               cache["v"]))
-    # one batched scatter per leaf: all layers' chunk tokens at their
-    # canonical slots (padded positions target slot CL and drop)
-    ks = cache["k"].at[:, rows[:, None], slot].set(k_new.astype(cache["k"].dtype))
-    vs = cache["v"].at[:, rows[:, None], slot].set(v_new.astype(cache["v"].dtype))
-    new_pos = cache["pos"].at[:, rows[:, None], slot].set(positions)
-    cache = dict(cache, k=ks, v=vs, pos=new_pos)
-    h = rms_norm(p["final_norm"], h, offset=cfg.rmsnorm_offset)
+    cache, h = _chunk_forward(p, cfg, cache, tokens, positions)
     logits = (h[:, take] @ lm_head_w(p, cfg)).astype(jnp.float32)
     return cache, mask_padded_vocab(logits, cfg.vocab_size)
+
+
+def verify_step(p: Params, cfg: ModelConfig, cache: dict, tokens: jax.Array,
+                start: jax.Array):
+    """Score K candidate tokens per row in ONE batched forward — the verify
+    half of draft-and-verify speculative decoding.
+
+    ``tokens``: int32 [B, K] candidate continuations per slot; ``start``:
+    int32 [B], the absolute position of each row's FIRST candidate (the
+    scheduler passes ``index + 1``; ``-1`` marks a dead row — the whole row
+    is masked, so no position of a dead row can write KV or match a query).
+    Row ``b``'s candidates sit at positions ``start[b] .. start[b]+K-1`` and
+    their KV is written at the canonical ring slots (``p % CL``), exactly as
+    K sequential :func:`decode_step` calls would have.
+
+    Returns ``(logits [B, K, V], cache)``: ``logits[b, j]`` is the target's
+    next-token distribution after consuming candidates ``0..j`` — comparing
+    ``argmax(logits[:, :-1])`` against ``tokens[:, 1:]`` yields the accepted
+    prefix, and :func:`rollback_kv_window` rewinds the rejected suffix.
+    Only architectures with a uniform attention stack are supported (same
+    gate as :func:`supports_chunked_prefill`).
+
+    On dense caches the forward runs in scatter-first *exact* mode: logits
+    and written KV are bitwise what K sequential :func:`decode_step` calls
+    produce, so speculative greedy streams are byte-identical to
+    non-speculative serving by construction.  Windowed caches use the
+    read-only chunk form — positionally exact, but the online-softmax
+    partitioning differs from sequential decode, so bf16 logit *ties* may
+    resolve differently (greedy streams can diverge at near-tie tokens).
+    """
+    from repro.models.layers import mask_padded_vocab
+
+    B, K = tokens.shape
+    start = jnp.asarray(start, jnp.int32)
+    # guard the WHOLE row on start < 0: -1 + j is >= 0 for j >= 1, so a
+    # per-position mask would let dead rows write real ring slots
+    positions = jnp.where(start[:, None] >= 0,
+                          start[:, None] + jnp.arange(K, dtype=jnp.int32), -1)
+    cache, h = _chunk_forward(p, cfg, cache, tokens, positions,
+                              exact=not cfg.window)
+    logits = (h @ lm_head_w(p, cfg)).astype(jnp.float32)  # [B, K, V]
+    return mask_padded_vocab(logits, cfg.vocab_size), cache
+
+
+def snapshot_kv_window(cfg: ModelConfig, cache: dict, start: jax.Array,
+                       K: int) -> dict:
+    """Capture the KV/pos entries the next K-token speculative write will
+    touch, BEFORE writing — the undo slab for :func:`rollback_kv_window`.
+
+    Gathers, per row, the K ring slots for positions ``start[b] ..
+    start[b]+K-1`` (``start[b] = -1`` = dead row; its slots resolve to CL so
+    the paired restore drops).  Within a row, K ≤ CL consecutive positions
+    map to K distinct slots, so the snapshot/restore pair is exact even when
+    the window wraps and the speculative write evicts in-window keys.
+    Returns ``{"slot": [B, K], "pos": [B, K], "k"/"v": [L, B, K, Hkv, hd]}``.
+    """
+    CL = cache["pos"].shape[-1]
+    start = jnp.asarray(start, jnp.int32)
+    positions = jnp.where(start[:, None] >= 0,
+                          start[:, None] + jnp.arange(K, dtype=jnp.int32), -1)
+    slot = _ring_slot(cfg, CL, positions)  # [B, K]; dead/OOB -> CL (clamped read)
+    rows = jnp.arange(slot.shape[0])
+    return {
+        "slot": slot,
+        "pos": cache["pos"][0][rows[:, None], slot],
+        "k": cache["k"][:, rows[:, None], slot],
+        "v": cache["v"][:, rows[:, None], slot],
+    }
+
+
+def rollback_kv_window(cfg: ModelConfig, cache: dict, undo: dict,
+                       keep: jax.Array) -> dict:
+    """Rewind a K-token speculative write: restore entries ``j >= keep[b]``
+    of each row from the ``undo`` slab (:func:`snapshot_kv_window`), leaving
+    the accepted prefix ``j < keep[b]`` in place.  Restored slots get their
+    pre-write KV *and* position values back — including ``-1`` (empty) and
+    evicted in-window positions on a wrapped ring — so the cache is exactly
+    what K_accepted sequential :func:`decode_step` writes would have left.
+    Kept (and dead-row) entries target slot CL, which scatter-drops.
+    """
+    K = undo["slot"].shape[1]
+    CL = cache["pos"].shape[-1]
+    rows = jnp.arange(undo["slot"].shape[0])
+    restore = jnp.arange(K)[None, :] >= jnp.asarray(keep, jnp.int32)[:, None]
+    slot = jnp.where(restore, undo["slot"], CL)  # kept entries drop
+    return dict(
+        cache,
+        k=cache["k"].at[:, rows[:, None], slot].set(
+            undo["k"].astype(cache["k"].dtype)),
+        v=cache["v"].at[:, rows[:, None], slot].set(
+            undo["v"].astype(cache["v"].dtype)),
+        pos=cache["pos"].at[:, rows[:, None], slot].set(undo["pos"]),
+    )
 
 
 def extract_kv_blocks(cfg: ModelConfig, cache: dict, start: jax.Array | int,

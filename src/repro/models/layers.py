@@ -147,13 +147,23 @@ def init_attention(key, cfg: ModelConfig, *, stack=()) -> Params:
 def _chunk_mask(qp: jax.Array, kp: jax.Array, kind: str, window: int):
     """[B?, qc, kc] bool validity from absolute positions (kp = -1 ⇒ empty
     slot).  qp/kp are [qc]/[kc] shared over the batch, or [B, qc]/[B, kc]
-    per-slot (continuous batching: every batch row at its own position)."""
+    per-slot (continuous batching: every batch row at its own position).
+
+    ``kind``: "causal" (kp <= qp, optional sliding window), "causal_strict"
+    (kp < qp — the cache half of a scatter-first exact verify, where the
+    query's own key already sits in the cache and must come from the extra
+    chunk instead), "self" (kp == qp — the matching extra chunk, each query
+    attending only its own appended key), or "full" (cross-attention)."""
     if qp.ndim == 1:
         qp = qp[None]
     if kp.ndim == 1:
         kp = kp[None]
     valid = kp[:, None, :] >= 0
-    if kind == "causal":
+    if kind == "self":
+        valid &= kp[:, None, :] == qp[:, :, None]
+    elif kind == "causal_strict":
+        valid &= kp[:, None, :] < qp[:, :, None]
+    elif kind == "causal":
         valid &= kp[:, None, :] <= qp[:, :, None]
         if window:
             valid &= kp[:, None, :] > qp[:, :, None] - window
@@ -162,7 +172,7 @@ def _chunk_mask(qp: jax.Array, kp: jax.Array, kind: str, window: int):
 
 def _sdpa(q, k, v, cfg: ModelConfig, *, q_pos, k_pos, kind: str = "causal",
           window: int = 0, chunk_q: int = 512, chunk_k: int = 1024,
-          extra_kv=None):
+          extra_kv=None, extra_kind: str | None = None):
     """Flash-style chunked attention with online softmax.
 
     q: [B,Sq,H,hd]; k/v: [B,Sk,Hkv,hd]; q_pos [Sq] or [B,Sq], k_pos [Sk] or
@@ -202,10 +212,10 @@ def _sdpa(q, k, v, cfg: ModelConfig, *, q_pos, k_pos, kind: str = "causal",
         qp = jax.lax.dynamic_slice_in_dim(q_pos, qi * cq, cq, axis=1)
         qb = qb.reshape(B, cq, Hkv, rep, hd)
 
-        def merge_chunk(carry, kb, vb, kp):
+        def merge_chunk(carry, kb, vb, kp, mk=kind):
             m, l, acc = carry
             s = jnp.einsum("bqkrd,bskd->bkrqs", qb, kb).astype(jnp.float32) * scale
-            valid = _chunk_mask(qp, kp, kind, window)  # [1 or B, cq, kc]
+            valid = _chunk_mask(qp, kp, mk, window)  # [1 or B, cq, kc]
             s = jnp.where(valid[:, None, None], s, -1e30)
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
@@ -230,7 +240,8 @@ def _sdpa(q, k, v, cfg: ModelConfig, *, q_pos, k_pos, kind: str = "causal",
             # this step, so the cache stays read-only inside the layer loop)
             k1, v1, p1 = extra_kv
             m, l, acc = merge_chunk((m, l, acc), k1.astype(qb.dtype),
-                                    v1.astype(qb.dtype), p1)
+                                    v1.astype(qb.dtype), p1,
+                                    extra_kind or kind)
         out = acc / jnp.maximum(l, 1e-30)[..., None]  # [B, Hkv, rep, cq, hd]
         return None, out.transpose(0, 3, 1, 2, 4)      # [B, cq, Hkv, rep, hd]
 
@@ -242,7 +253,7 @@ def _sdpa(q, k, v, cfg: ModelConfig, *, q_pos, k_pos, kind: str = "causal",
 def append_attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
                      positions: jax.Array, cache_k: jax.Array,
                      cache_v: jax.Array, k_positions: jax.Array,
-                     window: int = 0):
+                     window: int = 0, scatter_slots: jax.Array | None = None):
     """Attention over a READ-ONLY kv cache plus the tokens being appended.
 
     The decode/chunked-prefill form: q/k/v come from ``x`` (``Sq`` = 1 for
@@ -263,6 +274,21 @@ def append_attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
     logits ``take`` index; dead decode rows are masked by the scheduler) and
     its k/v must not be written back (its ring slot maps out of range).
     Returns (out [B, Sq, D], (k, v) [B, Sq, Hkv, hd]).
+
+    ``scatter_slots`` ([B, Sq] ring slots, out-of-range drops) switches to
+    the *scatter-first exact* form used by dense speculative verify: the
+    chunk's fresh (k, v) are written into the cache BEFORE attending, the
+    cache scan is masked strictly below each query (``kp < qp`` — so a
+    query's earlier chunk-mates are attended from their ring slots, in ring
+    order), and the extra chunk is masked to self-only (``kp == qp``).  Per
+    query, the attended set, partition boundaries, and reduction order are
+    then *identical* to ``Sq`` sequential single-token decode steps, making
+    verify bitwise equal to sequential decode — the property the speculative
+    scheduler's byte-identity guarantee rests on.  Only valid for dense
+    (``window == 0``) caches whose slot is the position itself: on a wrapped
+    ring the scatter would evict in-window keys that sequential decode at the
+    earlier window positions still legitimately attends.  Returns
+    (out [B, Sq, D], (cache_k, cache_v) post-scatter [B, CL, Hkv, hd]).
     """
     B, Sq, _ = x.shape
     q = linear(p["wq"], x, cfg, role="wq").reshape(B, Sq, cfg.n_heads, cfg.head_dim)
@@ -273,6 +299,17 @@ def append_attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
         k = rms_norm(p["k_norm"], k)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
+    if scatter_slots is not None:
+        if window:
+            raise ValueError("scatter-first exact attention requires a "
+                             "dense (window=0) cache")
+        rows = jnp.arange(B)[:, None]
+        cache_k = cache_k.at[rows, scatter_slots].set(k.astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, scatter_slots].set(v.astype(cache_v.dtype))
+        o = _sdpa(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype), cfg,
+                  q_pos=positions, k_pos=k_positions, kind="causal_strict",
+                  extra_kv=(k, v, positions), extra_kind="self")
+        return linear(p["wo"], o, cfg, role="wo"), (cache_k, cache_v)
     o = _sdpa(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype), cfg,
               q_pos=positions, k_pos=k_positions, window=window,
               extra_kv=(k, v, positions))

@@ -336,10 +336,16 @@ def engine_state_specs(state: Any, mesh: Mesh, *, kv_heads: int | None = None):
     the KV/state ``cache`` through :func:`cache_specs`, every per-slot
     control vector (``logits``/``live``/``index``/``remaining``/``stop``)
     batch-sharded on dim 0 when divisible — the layout the mesh-mode
-    engine pins on its jitted admit-commit / sched-step entry points."""
-    control = {k: v for k, v in state.items() if k != "cache"}
+    engine pins on its jitted admit-commit / sched-step entry points.
+    A speculative draft cache (``dcache``) replicates whole: the draft
+    model runs replicated (params and KV alike — it is small by
+    construction), matching the engine's draft ``ShardInfo(model=1)``."""
+    control = {k: v for k, v in state.items()
+               if k not in ("cache", "dcache")}
     specs = batch_specs(control, mesh)
     specs["cache"] = cache_specs(state["cache"], mesh, kv_heads=kv_heads)
+    if "dcache" in state:
+        specs["dcache"] = jax.tree.map(lambda _: P(), state["dcache"])
     return specs
 
 

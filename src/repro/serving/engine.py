@@ -18,6 +18,7 @@ The engine adds the serving substrate around the model's decode_step:
 
 from __future__ import annotations
 
+import itertools
 import logging
 from collections import Counter
 from dataclasses import dataclass, field
@@ -47,16 +48,50 @@ class SamplerConfig:
     temperature: float = 0.0  # 0 → greedy
     top_k: int = 0
     seed: int = 0
+    #: greedy selection via :func:`greedy_tokens` (bf16-canonicalized argmax)
+    #: instead of raw f32 argmax.  The speculative path ALWAYS selects
+    #: canonically (its free token, draft proposals, and verify predictions
+    #: must agree across differently-compiled programs); set this on a
+    #: non-speculative engine to make its greedy stream byte-comparable to a
+    #: speculative one.  Off by default: raw argmax is the historical
+    #: semantic, and the bf16 grid draws its own tie boundaries (a sharded
+    #: run whose psum drift spans a grid edge can flip differently than raw).
+    canonical_greedy: bool = False
+
+
+def greedy_tokens(logits: jax.Array) -> jax.Array:
+    """Canonical greedy selection: round logits to bf16, then argmax.
+
+    Logits come off a bf16 matmul, so adjacent candidates routinely sit
+    within one bf16 ulp of each other — and XLA compiles the *same* float
+    math to slightly different last bits in different programs (jitted
+    sched_step vs the fused speculative round vs op-by-op eager; measured
+    ~3e-4 drift on this backend, ~50x below the bf16 grid at logit scale).
+    Raw f32 argmax lets that sub-ulp drift flip near-tie tokens between
+    programs, which would break the speculative path's byte-identity
+    guarantee.  Rounding to bf16 first collapses sub-ulp drift back onto one
+    grid point, and exact bf16 ties resolve to the lowest token id in every
+    code path — so every greedy consumer in the speculative round (the
+    sampler via ``canonical_greedy``, draft proposals, verify predictions)
+    picks the same token for the same underlying distribution.
+    """
+    return jnp.argmax(logits.astype(jnp.bfloat16), axis=-1).astype(jnp.int32)
 
 
 def sample_tokens(logits: jax.Array, cfg: SamplerConfig, key) -> jax.Array:
     if cfg.temperature <= 0.0:
+        if cfg.canonical_greedy:
+            return greedy_tokens(logits)
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / cfg.temperature
     if cfg.top_k:
         kth = jax.lax.top_k(logits, cfg.top_k)[0][..., -1:]
         logits = jnp.where(logits < kth, -1e30, logits)
     return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+#: process-wide monotonic request-id source (see ``Request.rid``)
+_RID = itertools.count()
 
 
 @dataclass
@@ -69,6 +104,11 @@ class Request:
     on_token: Callable[["Request", int], None] | None = None
     out: list[int] = field(default_factory=list)
     done: bool = False
+    #: stable monotonically-assigned request id — the key for any per-request
+    #: bookkeeping map (TTFT/TPOT/acceptance).  ``id(request)`` is NOT safe
+    #: for that: CPython reuses object ids after GC, so a long-running server
+    #: keyed on identity can silently merge two requests' stats.
+    rid: int = field(default_factory=_RID.__next__)
 
 
 #: token fed to dead/padding slots (any in-vocab id works; outputs of those
@@ -81,7 +121,9 @@ class DecodeEngine:
                  max_len: int, sampler: SamplerConfig | None = None,
                  matmul_policy: str | None = None, prefill_chunk: int = 32,
                  mesh=None, prefix_cache=False,
-                 prefix_cache_mb: float = 64.0):
+                 prefix_cache_mb: float = 64.0,
+                 draft: tuple[Any, ModelConfig] | None = None,
+                 spec_k: int = 4):
         """``matmul_policy`` overrides ``cfg.matmul_policy`` for every ternary
         projection this engine executes ("auto" | "prior" | "fixed:<kernel>",
         see :mod:`repro.kernels.dispatch`).  Kernel selection happens once,
@@ -117,7 +159,22 @@ class DecodeEngine:
         whole-prompt fallback families carry recurrent state a KV slab
         cannot capture — and on windowed configs reuse depth is capped at
         the ring length (deeper blocks would be overwritten before the
-        prompt tail attends them)."""
+        prompt tail attends them).
+
+        ``draft`` = ``(draft_params, draft_cfg)`` turns on draft-and-verify
+        speculative decoding on the continuous path: each scheduler step the
+        (small, replicated) draft model proposes ``spec_k - 1`` greedy
+        continuations of the target's free next token and the target scores
+        all ``spec_k`` candidates in ONE batched ``verify_step`` forward;
+        the accepted prefix is kept, the rejected suffix's KV/pos writes are
+        rewound on both caches (``rollback_kv_window``).  Greedy streams are
+        preserved exactly: every emitted token is, by construction, the
+        target's own argmax — the draft only decides how many of them one
+        step yields.  Requires temperature-0 sampling, a shared
+        tokenizer/vocab, and chunked-prefill-capable architectures on both
+        sides (the batched verify is the chunk forward); admission prefills
+        the draft cache alongside the target's.  The generational ``run()``
+        path ignores the draft."""
         if matmul_policy is not None:
             cfg = cfg.with_(matmul_policy=matmul_policy)
         self.cfg = cfg
@@ -131,6 +188,48 @@ class DecodeEngine:
         self._CL = cache_len(cfg, max_len)
         self.prefix_store = self._make_prefix_store(prefix_cache,
                                                     prefix_cache_mb)
+        #: speculative decoding: 0 = off; >= 2 = candidates scored per
+        #: verify step (1 free target token + spec_k - 1 drafted)
+        self.spec_k = 0
+        self.draft_params = None
+        self.draft_cfg: ModelConfig | None = None
+        if draft is not None:
+            draft_params, draft_cfg = draft
+            if matmul_policy is not None:
+                draft_cfg = draft_cfg.with_(matmul_policy=matmul_policy)
+            if draft_cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft/target tokenizer mismatch: draft "
+                    f"{draft_cfg.name} has vocab_size {draft_cfg.vocab_size} "
+                    f"but target {cfg.name} has {cfg.vocab_size}; "
+                    f"speculative decoding compares token ids directly, so "
+                    f"draft and target must share one tokenizer/vocab")
+            if self.sampler.temperature > 0.0:
+                raise ValueError(
+                    f"speculative decoding preserves greedy streams only "
+                    f"(temperature=0); got temperature="
+                    f"{self.sampler.temperature}")
+            if spec_k < 2:
+                raise ValueError(
+                    f"spec_k must be >= 2 (the target's free next token plus "
+                    f"at least one drafted candidate); got {spec_k}")
+            for side, c in (("target", cfg), ("draft", draft_cfg)):
+                if spec_k > cache_len(c, max_len):
+                    raise ValueError(
+                        f"spec_k {spec_k} exceeds the {side} ring length "
+                        f"{cache_len(c, max_len)}: one verify window would "
+                        f"collide with itself in the KV ring")
+            for side, pp, c in (("target", params, cfg),
+                                ("draft", draft_params, draft_cfg)):
+                if not supports_chunked_prefill(pp, c):
+                    raise ValueError(
+                        f"speculative decoding needs the batched verify "
+                        f"forward (the chunked-prefill path), which the "
+                        f"{side} architecture {c.name} does not support "
+                        f"(block_pattern={c.block_pattern})")
+            self.spec_k = spec_k
+            self.draft_cfg = draft_cfg
+            self.draft_params = draft_params
         self.mesh = mesh
         #: per-entry-point trace-time shard geometry (mesh mode only).  The
         #: batch divisor differs per entry: the batched decode step shards
@@ -157,9 +256,26 @@ class DecodeEngine:
                 "prefill": admit_info, "prefill_chunk": admit_info,
                 "admit_commit": admit_info,
             }
+            if self.spec_k:
+                # the draft model runs replicated (model=1): its params and
+                # cache are small by construction, and TP collectives on a
+                # sub-billion-parameter draft would cost more than they save.
+                # The verify half of spec_step is the TARGET forward and
+                # keeps the decode-step TP geometry.
+                self._shard_infos["spec_step"] = decode_info
+                self._shard_infos["spec_draft"] = ShardInfo(
+                    model=1, data=data, batch=data,
+                    n_heads=self.draft_cfg.n_heads,
+                    n_kv_heads=self.draft_cfg.n_kv_heads)
+                self._shard_infos["draft_prefill_chunk"] = ShardInfo(
+                    model=1, data=data, batch=1,
+                    n_heads=self.draft_cfg.n_heads,
+                    n_kv_heads=self.draft_cfg.n_kv_heads)
             self._psh = sh.param_shardings(params, mesh, heads=heads)
             params = jax.device_put(params, self._psh)
             repl = NamedSharding(mesh, PartitionSpec())
+            if self.spec_k:
+                self.draft_params = jax.device_put(self.draft_params, repl)
             state_sds = jax.eval_shape(self._state_template)
             self._state_sh = sh.to_shardings(
                 sh.engine_state_specs(state_sds, mesh,
@@ -221,14 +337,24 @@ class DecodeEngine:
                 (getattr(self, "_cache1_sh", None), repl)))
         # donate only the big state: the single-row chunk cache cannot alias
         # any [B, ...] output buffer, so donating it would just warn
-        self._admit_commit_fn = jax.jit(
-            self._counted("admit_commit", self._admit_commit),
-            donate_argnums=(0,),
-            **shardings(
-                (getattr(self, "_state_sh", None),
-                 getattr(self, "_cache1_sh", None), repl, repl, repl, repl,
-                 repl),
-                getattr(self, "_state_sh", None)))
+        if self.spec_k:
+            self._admit_commit_fn = jax.jit(
+                self._counted("admit_commit", self._admit_commit_spec),
+                donate_argnums=(0,),
+                **shardings(
+                    (getattr(self, "_state_sh", None),
+                     getattr(self, "_cache1_sh", None), repl, repl, repl,
+                     repl, repl, repl),
+                    getattr(self, "_state_sh", None)))
+        else:
+            self._admit_commit_fn = jax.jit(
+                self._counted("admit_commit", self._admit_commit),
+                donate_argnums=(0,),
+                **shardings(
+                    (getattr(self, "_state_sh", None),
+                     getattr(self, "_cache1_sh", None), repl, repl, repl,
+                     repl, repl),
+                    getattr(self, "_state_sh", None)))
         self._sched_step_fn = jax.jit(
             self._counted("sched_step", self._make_sched_step()),
             donate_argnums=(1,),
@@ -236,6 +362,28 @@ class DecodeEngine:
                 (getattr(self, "_psh", None), getattr(self, "_state_sh", None),
                  repl),
                 (getattr(self, "_state_sh", None), repl, repl)))
+        if self.spec_k:
+            # the whole speculative round — draft-K scan, batched verify,
+            # accept mask, rollback of both caches — is ONE jitted call per
+            # scheduler step: K drafted positions plus K verified positions
+            # ride a single host round-trip, so per-call overhead is paid
+            # once per K-token window instead of once per token.  Draft
+            # params/cache replicate; target entries keep their TP layout.
+            dcfg = self.draft_cfg
+            self._draft_prefill_chunk_fn = jax.jit(
+                self._counted("draft_prefill_chunk",
+                              lambda p, c, t, pos, take: model_prefill_chunk(
+                                  p, dcfg, c, t, pos, take)),
+                donate_argnums=(1,),
+                **shardings((repl, repl, repl, repl, repl), (repl, repl)))
+            self._spec_step_fn = jax.jit(
+                self._counted("spec_step", self._make_spec_step()),
+                donate_argnums=(2,),
+                **shardings(
+                    (getattr(self, "_psh", None), repl,
+                     getattr(self, "_state_sh", None)),
+                    (getattr(self, "_state_sh", None), repl, repl, repl,
+                     repl)))
         if self.prefix_store is not None:
             # prefix-cache entry points: splice a stored KV slab into the
             # single-row admission cache / extract a just-prefilled block
@@ -345,6 +493,12 @@ class DecodeEngine:
         workload-dependent and belong to ``benchmarks/autotune_sweep.py``,
         not the engine's fixed universe.
 
+        With a draft model the universe also covers the speculative
+        operating points: the target's K-token verify (``M = B · spec_k``
+        through the ``spec_step`` geometry), the draft's per-step decode and
+        admission-chunk problems (``model=1`` — the draft runs replicated,
+        so its local problems are its global ones).
+
         In mesh mode the universe is **per-shard**: every problem is mapped
         through the entry point's ``ShardInfo`` (the same localization
         dispatch applies inside ``shard_scope``), so ``autotune_shapes``
@@ -352,23 +506,38 @@ class DecodeEngine:
         from repro.models.decode import (layer_grouped_matmul_problems,
                                          layer_matmul_problems)
 
-        sources = [(self.B, 1, "sched_step")]
-        if include_prefill:
-            sources.append((1, self.prefill_chunk, "prefill_chunk"))
         shapes: set[tuple[int, ...]] = set()
-        for bs, sl, entry in sources:
+        for c, bs, sl, entry in self._shape_sources(
+                include_prefill=include_prefill):
             info = self._shard_infos.get(entry)
-            for role, m, k, n in layer_matmul_problems(self.cfg, bs,
-                                                       seq_len=sl):
+            for role, m, k, n in layer_matmul_problems(c, bs, seq_len=sl):
                 if info is not None:
                     m, k, n = info.local_dense(role, m, k, n)
                 shapes.add((m, k, n))
-            for role, e, c, k, n in layer_grouped_matmul_problems(
-                    self.cfg, bs, seq_len=sl):
+            for role, e, cap, k, n in layer_grouped_matmul_problems(
+                    c, bs, seq_len=sl):
                 if info is not None:
-                    e, c, k, n = info.local_grouped(role, e, c, k, n)
-                shapes.add((e, c, k, n))
+                    e, cap, k, n = info.local_grouped(role, e, cap, k, n)
+                shapes.add((e, cap, k, n))
         return sorted(shapes)
+
+    def _shape_sources(self, *, include_prefill: bool = True
+                       ) -> list[tuple[ModelConfig, int, int, str]]:
+        """The ``(cfg, batch_size, seq_len, entry_point)`` tuples whose
+        matmul problems make up this engine's steady-state shape universe —
+        target decode + admission chunk, and with a draft: target verify,
+        draft decode, draft admission chunk."""
+        sources = [(self.cfg, self.B, 1, "sched_step")]
+        if include_prefill:
+            sources.append((self.cfg, 1, self.prefill_chunk,
+                            "prefill_chunk"))
+        if self.spec_k:
+            sources.append((self.cfg, self.B, self.spec_k, "spec_step"))
+            sources.append((self.draft_cfg, self.B, 1, "spec_draft"))
+            if include_prefill:
+                sources.append((self.draft_cfg, 1, self.prefill_chunk,
+                                "draft_prefill_chunk"))
+        return sources
 
     def autotune_shapes(self, *, include_prefill: bool = True,
                         **autotune_kw) -> dict:
@@ -378,22 +547,43 @@ class DecodeEngine:
         dispatches on measurements instead of always falling back to the
         analytical prior.  Call before the first `run`/`serve`."""
         from repro.kernels.dispatch import autotune, get_autotune_cache
+        from repro.models.decode import (layer_grouped_matmul_problems,
+                                         layer_matmul_problems)
 
         cache = get_autotune_cache()
         results = {}
-        for shape in self.matmul_shape_universe(
+        seen: set[tuple] = set()
+        # iterate per source (not the merged universe): the act dtype the
+        # dispatch keys on is per-config — a bf16-act draft and an int8-act
+        # target may share a shape yet tune different kernel families
+        for c, bs, sl, entry in self._shape_sources(
                 include_prefill=include_prefill):
-            if len(shape) == 4:       # grouped expert stack (E, C, K, N)
-                e, m, k, n = shape
-            else:
-                (m, k, n), e = shape, None
+            info = self._shard_infos.get(entry)
             # under act_dtype="int8" every packed projection receives
             # pre-quantized int8 activations, so that is the dtype the
             # serving dispatch keys on (w2a8/tl2 become eligible)
-            act = "int8" if self.cfg.act_dtype == "int8" else self.cfg.dtype
-            results[shape] = autotune(m, k, n, act,
-                                      mu=self.cfg.mu, cache=cache,
-                                      save=False, e=e, **autotune_kw)
+            act = "int8" if c.act_dtype == "int8" else c.dtype
+            probs: list[tuple[tuple[int, ...], int | None]] = []
+            for role, m, k, n in layer_matmul_problems(c, bs, seq_len=sl):
+                if info is not None:
+                    m, k, n = info.local_dense(role, m, k, n)
+                probs.append(((m, k, n), None))
+            for role, e, cap, k, n in layer_grouped_matmul_problems(
+                    c, bs, seq_len=sl):
+                if info is not None:
+                    e, cap, k, n = info.local_grouped(role, e, cap, k, n)
+                probs.append(((e, cap, k, n), e))
+            for shape, e in probs:
+                if (shape, act) in seen:
+                    continue
+                seen.add((shape, act))
+                if e is not None:
+                    _, m, k, n = shape
+                else:
+                    m, k, n = shape
+                results[shape] = autotune(m, k, n, act,
+                                          mu=c.mu, cache=cache,
+                                          save=False, e=e, **autotune_kw)
         cache.save()  # one write for the whole shape set
         return results
 
@@ -486,9 +676,91 @@ class DecodeEngine:
                                         jnp.where(live, index, -1))
             remaining = state["remaining"] - live
             alive = live & (toks != state["stop"]) & (remaining > 0)
-            state = dict(cache=cache, logits=logits, index=index,
+            state = dict(state, cache=cache, logits=logits, index=index,
                          remaining=remaining, stop=state["stop"], live=alive)
             return state, toks, alive
+
+        return step
+
+    def _make_spec_step(self):
+        """Fused speculative round (continuous path, greedy only):
+
+        1. the target's FREE next token ``c0 = argmax(state["logits"])`` —
+           already exactly what the non-speculative step would emit;
+        2. a K-step draft scan proposes ``c1..c_{K-1}`` greedily and writes
+           ALL K candidates into the draft ring, so the draft cache stays
+           position-synced for any acceptance count;
+        3. one batched target ``verify_step`` scores all K candidates;
+           candidate ``j >= 1`` is accepted iff it equals the target's own
+           argmax after candidates ``0..j-1`` — i.e. iff it IS the token the
+           sequential greedy engine would have emitted;
+        4. stop/budget masking over the accepted window, then
+           ``rollback_kv_window`` rewinds both rings past the accepted
+           prefix.
+
+        Dead rows (``live = False``) verify at position -1: no KV/pos write
+        lands and ``n_acc = n_emit = 0``.  Returns ``(state, cands [B, K],
+        n_acc [B], n_emit [B], alive [B])``.
+        """
+        from repro.kernels.dispatch import shard_scope
+        from repro.models.decode import (rollback_kv_window,
+                                         snapshot_kv_window, verify_step)
+
+        cfg, dcfg, K = self.cfg, self.draft_cfg, self.spec_k
+        dinfo = self._shard_infos.get("spec_draft")
+
+        def step(p, dp, state):
+            live = state["live"]
+            index = state["index"]
+            B = live.shape[0]
+            start = jnp.where(live, index + 1, -1)
+            c0 = jnp.where(live, greedy_tokens(state["logits"]), PAD_TOKEN)
+            dcache = state["dcache"]
+            with shard_scope(dinfo):
+                dundo = snapshot_kv_window(dcfg, dcache, start, K)
+
+                def draft_body(carry, j):
+                    dc, tok = carry
+                    dlogits, dc = decode_step(dp, dcfg, dc, tok,
+                                              jnp.where(live, index + 1 + j,
+                                                        -1))
+                    nxt = jnp.where(live, greedy_tokens(dlogits), PAD_TOKEN)
+                    return (dc, nxt), tok
+
+                (dcache, _), cands = jax.lax.scan(
+                    draft_body, (dcache, c0), jnp.arange(K, dtype=jnp.int32))
+            cands = jnp.swapaxes(cands, 0, 1)  # [B, K]
+            undo = snapshot_kv_window(cfg, state["cache"], start, K)
+            vlogits, cache = verify_step(p, cfg, state["cache"], cands, start)
+            pred = greedy_tokens(vlogits)  # [B, K]
+            # accepted prefix: candidate j (>=1) must equal the target's
+            # argmax after consuming candidates 0..j-1; c0 is always accepted
+            match = (cands[:, 1:] == pred[:, :-1]).astype(jnp.int32)
+            n_acc = jnp.where(
+                live, 1 + jnp.sum(jnp.cumprod(match, axis=1), axis=1), 0)
+            # stop/budget masking over the accepted window: emit up to (and
+            # including) the first stop token, never past the budget
+            j_iota = jnp.arange(K, dtype=jnp.int32)[None, :]
+            is_stop = (j_iota < n_acc[:, None]) & \
+                (cands == state["stop"][:, None])
+            stop_at = jnp.min(jnp.where(is_stop, j_iota, K), axis=1)
+            n_emit = jnp.minimum(jnp.minimum(n_acc, stop_at + 1),
+                                 state["remaining"])
+            remaining = state["remaining"] - n_emit
+            stopped = stop_at < n_emit  # the stop token was actually emitted
+            alive = live & ~stopped & (remaining > 0)
+            cache = rollback_kv_window(cfg, cache, undo, n_acc)
+            dcache = rollback_kv_window(dcfg, dcache, dundo, n_acc)
+            # next round's free token comes from the target's logits at the
+            # last accepted position (the "bonus" distribution verify paid
+            # for); dead rows keep their stale logits untouched
+            rows = jnp.arange(B)
+            nlog = vlogits[rows, jnp.maximum(n_acc - 1, 0)]
+            logits = jnp.where(live[:, None], nlog, state["logits"])
+            state = dict(state, cache=cache, dcache=dcache, logits=logits,
+                         index=index + n_acc, remaining=remaining,
+                         stop=state["stop"], live=alive)
+            return state, cands, n_acc, n_emit, alive
 
         return step
 
@@ -496,7 +768,7 @@ class DecodeEngine:
         """The scheduler-state pytree (also eval_shape'd in mesh mode to
         derive the state shardings pinned on the jitted entry points)."""
         B, V = self.B, self.cfg.padded_vocab
-        return {
+        state = {
             "cache": init_cache(self.cfg, B, self.max_len),
             "logits": jnp.zeros((B, V), jnp.float32),
             "live": jnp.zeros((B,), bool),
@@ -504,6 +776,12 @@ class DecodeEngine:
             "remaining": jnp.zeros((B,), jnp.int32),
             "stop": jnp.full((B,), -1, jnp.int32),
         }
+        if self.spec_k:
+            # the draft's KV ring rides in the scheduler state: its per-slot
+            # position trajectory is the target's (admission and every spec
+            # round write both in lockstep), so one `index` serves both
+            state["dcache"] = init_cache(self.draft_cfg, B, self.max_len)
+        return state
 
     def sched_start(self) -> dict:
         """Fresh scheduler state: empty cache, all slots dead.  In mesh mode
@@ -538,6 +816,7 @@ class DecodeEngine:
             return jax.lax.dynamic_update_slice(big, one.astype(big.dtype), idx)
 
         return dict(
+            state,
             cache=jax.tree.map(splice, state["cache"], cache1),
             logits=state["logits"].at[slot].set(logits1),
             live=state["live"].at[slot].set(True),
@@ -546,15 +825,34 @@ class DecodeEngine:
             stop=state["stop"].at[slot].set(stop),
         )
 
+    @staticmethod
+    def _admit_commit_spec(state: dict, cache1: dict, dcache1: dict, logits1,
+                           slot, index0, remaining, stop) -> dict:
+        """Speculative variant of :meth:`_admit_commit`: the draft's freshly
+        prefilled single-row cache is spliced into ``state["dcache"]`` at the
+        same slot, so the slot's draft ring starts in lockstep with the
+        target's (both hold the prompt's KV at positions ``0..plen-1``)."""
+        state = DecodeEngine._admit_commit(state, cache1, logits1, slot,
+                                           index0, remaining, stop)
+
+        def splice(big, one):
+            idx = (0, slot) + (0,) * (big.ndim - 2)
+            return jax.lax.dynamic_update_slice(big, one.astype(big.dtype), idx)
+
+        return dict(state,
+                    dcache=jax.tree.map(splice, state["dcache"], dcache1))
+
     def _commit(self, state: dict, slot: int, cache1: dict, logits1,
-                request: Request) -> dict:
+                request: Request, dcache1: dict | None = None) -> dict:
         stop = -1 if request.stop_token is None else int(request.stop_token)
-        return self._admit_commit_fn(
-            state, cache1, logits1,
-            jnp.asarray(slot, jnp.int32),
-            jnp.asarray(len(request.prompt) - 1, jnp.int32),
-            jnp.asarray(request.max_new_tokens, jnp.int32),
-            jnp.asarray(stop, jnp.int32))
+        scalars = (jnp.asarray(slot, jnp.int32),
+                   jnp.asarray(len(request.prompt) - 1, jnp.int32),
+                   jnp.asarray(request.max_new_tokens, jnp.int32),
+                   jnp.asarray(stop, jnp.int32))
+        if self.spec_k:
+            return self._admit_commit_fn(state, cache1, dcache1, logits1,
+                                         *scalars)
+        return self._admit_commit_fn(state, cache1, logits1, *scalars)
 
     def sched_admit_start(self, state: dict, slot: int, request: Request):
         """Begin admitting ``request`` into ``slot``.  Returns
@@ -607,7 +905,14 @@ class DecodeEngine:
         pending = {
             "request": request, "slot": slot, "plen": plen,
             "chunks": chunks, "i": hits, "hashes": hashes,
-            "cache": cache1,
+            "cache": cache1, "logits1": None,
+            # draft prefill cursor: the draft has no prefix store, so it
+            # computes EVERY chunk from 0 even when the target spliced hits —
+            # prefix reuse composes with speculation without touching the
+            # draft ring's contents
+            "di": 0 if self.spec_k else len(chunks),
+            "dcache": (init_cache(self.draft_cfg, 1, self.max_len)
+                       if self.spec_k else None),
         }
         return state, pending
 
@@ -631,22 +936,38 @@ class DecodeEngine:
         When a prefix store is attached, each freshly-computed full block
         within reuse depth is extracted from the just-written ring slots and
         published, so the next request sharing the prefix splices instead of
-        recomputing."""
+        recomputing.
+
+        With a draft model, each call also advances the draft's own prefill
+        by one chunk (same tokens/positions, its private single-row cache),
+        so admission completes with BOTH rings armed; total call count stays
+        ``len(chunks)`` — the draft catches up during the calls the target
+        skipped via prefix hits."""
+        n = len(pending["chunks"])
+        if pending["di"] < n:
+            toks, pos, take = pending["chunks"][pending["di"]]
+            pending["dcache"], _ = self._draft_prefill_chunk_fn(
+                self.draft_params, pending["dcache"], toks, pos, take)
+            pending["di"] += 1
         i = pending["i"]
-        toks, pos, take = pending["chunks"][i]
-        pending["cache"], logits1 = self._prefill_chunk_fn(
-            self.params, pending["cache"], toks, pos, take)
-        if i < len(pending["hashes"]) and \
-                pending["hashes"][i] not in self.prefix_store:
-            slab = self._extract_block_fn(
-                pending["cache"],
-                jnp.asarray(i * self.prefill_chunk, jnp.int32))
-            self.prefix_store.put(pending["hashes"][i], slab)
-        pending["i"] += 1
-        if pending["i"] < len(pending["chunks"]):
+        if i < n:
+            toks, pos, take = pending["chunks"][i]
+            pending["cache"], logits1 = self._prefill_chunk_fn(
+                self.params, pending["cache"], toks, pos, take)
+            if i < len(pending["hashes"]) and \
+                    pending["hashes"][i] not in self.prefix_store:
+                slab = self._extract_block_fn(
+                    pending["cache"],
+                    jnp.asarray(i * self.prefill_chunk, jnp.int32))
+                self.prefix_store.put(pending["hashes"][i], slab)
+            pending["i"] += 1
+            if pending["i"] >= n:
+                pending["logits1"] = logits1
+        if pending["i"] < n or pending["di"] < n:
             return state, pending
         state = self._commit(state, pending["slot"], pending["cache"],
-                             logits1[0], pending["request"])
+                             pending["logits1"][0], pending["request"],
+                             dcache1=pending["dcache"])
         return state, None
 
     def prefix_match_len(self, request: Request) -> int:
@@ -690,6 +1011,20 @@ class DecodeEngine:
         self._key, k = jax.random.split(self._key)
         state, toks, alive = self._sched_step_fn(self.params, state, k)
         return state, np.asarray(toks), np.asarray(alive)
+
+    def sched_spec_step(self, state: dict):
+        """One speculative round (ScheduleBackend accept/rollback protocol).
+        Returns ``(state, cands [B, K], n_acc [B], n_emit [B], alive [B])``:
+        slot ``b`` emits ``cands[b, :n_emit[b]]`` — every emitted token is
+        the target's own greedy choice; ``n_acc - 1`` of them (live rows)
+        were drafted.  Greedy only; requires a ``draft`` at construction."""
+        if not self.spec_k:
+            raise RuntimeError("sched_spec_step requires draft= at engine "
+                               "construction")
+        state, cands, n_acc, n_emit, alive = self._spec_step_fn(
+            self.params, self.draft_params, state)
+        return (state, np.asarray(cands), np.asarray(n_acc),
+                np.asarray(n_emit), np.asarray(alive))
 
     def serve(self, requests: list[Request], *,
               on_token: Callable[[Request, int], None] | None = None,

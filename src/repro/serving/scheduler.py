@@ -68,6 +68,17 @@ class ScheduleBackend(Protocol):
     prefill a prefix cache would skip right now (a read-only probe) — which
     lets the scheduler admit cache-hot requests first (see
     ``ContinuousScheduler(cache_affinity=...)``).
+
+    A backend may also implement the **speculative accept/rollback step** —
+    an int attribute ``spec_k >= 2`` plus ``sched_spec_step(state) ->
+    (state, tokens, n_acc, n_emit, alive)`` where ``tokens`` is ``[B,
+    spec_k]`` candidate tokens per slot, slot ``b`` emits exactly
+    ``tokens[b, :n_emit[b]]`` this step (``1 <= n_emit <= spec_k`` for live
+    slots; the backend has already rolled back every rejected candidate's
+    state), and ``n_acc[b] - 1`` counts the accepted *drafted* tokens (the
+    acceptance-rate numerator).  When present, the scheduler drives
+    ``sched_spec_step`` instead of ``sched_step`` and fans the ragged
+    multi-token windows out to the per-token streaming callbacks.
     """
 
     batch_size: int
@@ -100,12 +111,31 @@ class SchedulerStats:
     #: admissions that jumped ahead of an older queued request on cache
     #: affinity (0 under pure FIFO)
     affinity_reorders: int = 0
+    #: speculative rounds run (0 on non-speculative backends)
+    spec_rounds: int = 0
+    #: candidates the draft proposed across live slots (``spec_k - 1`` per
+    #: live slot per round)
+    drafted_tokens: int = 0
+    #: drafted candidates the target verified and accepted (``n_acc - 1``
+    #: summed over live slots) — ``accepted/drafted`` is the acceptance rate
+    accepted_drafted_tokens: int = 0
+    #: per-request accepted-drafted-token counts keyed on ``Request.rid``
+    accepted_by_rid: dict[int, int] = field(default_factory=dict)
 
     @property
     def decode_steps(self) -> int:
-        """Steps that ran a backend decode (``sched_step``) — the number
-        serving benchmarks report as decode steps."""
+        """Steps that ran a backend decode (``sched_step`` or
+        ``sched_spec_step``) — the number serving benchmarks report as
+        decode steps."""
         return self.steps - self.admission_steps
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted candidates the target accepted (0.0 when
+        nothing was drafted)."""
+        if not self.drafted_tokens:
+            return 0.0
+        return self.accepted_drafted_tokens / self.drafted_tokens
 
     def queue_wait_summary(self) -> dict:
         """mean/p50/max of per-request queue wait (seconds; zeros when no
@@ -157,9 +187,9 @@ class ContinuousScheduler:
         self.cache_affinity = cache_affinity
         self.affinity_window = affinity_window
         self.max_affinity_skips = max_affinity_skips
-        #: id(request) → times an affinity pick jumped it while queued
+        #: request.rid → times an affinity pick jumped it while queued
         self._skips: dict[int, int] = {}
-        #: id(request) → perf_counter() at submit (queue-wait accounting)
+        #: request.rid → perf_counter() at submit (queue-wait accounting)
         self._enqueue_t: dict[int, float] = {}
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * self.B
@@ -197,7 +227,7 @@ class ContinuousScheduler:
         within the affinity window).  Safe to call mid-run, between steps."""
         if request.done:
             raise ValueError("request already completed; submit a fresh one")
-        self._enqueue_t[id(request)] = time.perf_counter()
+        self._enqueue_t[request.rid] = time.perf_counter()
         self.queue.append(request)
 
     def _pop_next(self) -> Request:
@@ -210,8 +240,8 @@ class ContinuousScheduler:
         if not self.cache_affinity or match_len is None or len(self.queue) == 1:
             return self.queue.popleft()
         head = self.queue[0]
-        if self._skips.get(id(head), 0) >= self.max_affinity_skips:
-            self._skips.pop(id(head), None)
+        if self._skips.get(head.rid, 0) >= self.max_affinity_skips:
+            self._skips.pop(head.rid, None)
             return self.queue.popleft()
         best_i, best = 0, -1
         for i in range(min(len(self.queue), self.affinity_window)):
@@ -220,16 +250,16 @@ class ContinuousScheduler:
                 best_i, best = i, m
         req = self.queue[best_i]
         del self.queue[best_i]
-        self._skips.pop(id(req), None)
+        self._skips.pop(req.rid, None)
         if best_i > 0:
             self.stats.affinity_reorders += 1
             for j in range(best_i):  # everyone older than the pick was jumped
                 jumped = self.queue[j]
-                self._skips[id(jumped)] = self._skips.get(id(jumped), 0) + 1
+                self._skips[jumped.rid] = self._skips.get(jumped.rid, 0) + 1
         return req
 
     def _record_admission(self, req: Request) -> None:
-        t0 = self._enqueue_t.pop(id(req), None)
+        t0 = self._enqueue_t.pop(req.rid, None)
         if t0 is not None:
             self.stats.queue_wait_s.append(time.perf_counter() - t0)
 
@@ -242,7 +272,7 @@ class ContinuousScheduler:
                 req = self._pop_next()
                 if req.max_new_tokens <= 0:  # zero-budget: completes at once
                     req.done = True
-                    self._enqueue_t.pop(id(req), None)
+                    self._enqueue_t.pop(req.rid, None)
                     self.completed.append(req)
                     self.stats.completed += 1
                     continue
@@ -297,6 +327,9 @@ class ContinuousScheduler:
             self.stats.steps += 1
             self.stats.admission_steps += 1
             return []
+        if getattr(self.backend, "spec_k", 0) >= 2 and \
+                hasattr(self.backend, "sched_spec_step"):
+            return self._spec_step()
         self._state, tokens, alive = self.backend.sched_step(self._state)
         finished: list[Request] = []
         for slot, req in enumerate(self.slots):
@@ -308,6 +341,40 @@ class ContinuousScheduler:
             cb = req.on_token or self.on_token
             if cb is not None:
                 cb(req, tok)
+            if not bool(alive[slot]):
+                req.done = True
+                self.slots[slot] = None
+                self.completed.append(req)
+                self.stats.completed += 1
+                finished.append(req)
+        self.stats.steps += 1
+        return finished
+
+    def _spec_step(self) -> list[Request]:
+        """One speculative round: every live slot emits a ragged 1..spec_k
+        token window (the backend already rolled back rejected candidates),
+        streaming callbacks fire per token in order, and acceptance is
+        tallied globally and per request (``stats.accepted_by_rid``)."""
+        K = self.backend.spec_k
+        self._state, tokens, n_acc, n_emit, alive = \
+            self.backend.sched_spec_step(self._state)
+        self.stats.spec_rounds += 1
+        finished: list[Request] = []
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            accepted = max(int(n_acc[slot]) - 1, 0)
+            self.stats.drafted_tokens += K - 1
+            self.stats.accepted_drafted_tokens += accepted
+            self.stats.accepted_by_rid[req.rid] = \
+                self.stats.accepted_by_rid.get(req.rid, 0) + accepted
+            cb = req.on_token or self.on_token
+            for j in range(int(n_emit[slot])):
+                tok = int(tokens[slot, j])
+                req.out.append(tok)
+                self.stats.emitted_tokens += 1
+                if cb is not None:
+                    cb(req, tok)
             if not bool(alive[slot]):
                 req.done = True
                 self.slots[slot] = None

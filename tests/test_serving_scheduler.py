@@ -62,6 +62,75 @@ class FakeBackend:
         return state, tokens, alive
 
 
+class FakeSpecBackend:
+    """Deterministic ScheduleBackend speaking the speculative
+    accept/rollback protocol: per round, slot ``b`` accepts a ragged
+    1..spec_k-token window of its request's script (``accept(round, slot)``
+    decides how many), then applies the engine's stop/budget masking.  The
+    candidate rows are padded past the script with ``-7`` poison — a
+    scheduler that reads past ``n_emit`` emits poison and fails the stream
+    equality checks."""
+
+    def __init__(self, batch_size: int, spec_k: int = 3, accept=None):
+        self.batch_size = batch_size
+        self.spec_k = spec_k
+        self.accept = accept or (lambda rnd, b: 1 + (rnd + b) % spec_k)
+        self.admitted: list[Request] = []
+        self.rounds = 0
+        self.drafted = 0
+        self.accepted = 0
+
+    def sched_start(self):
+        return [None] * self.batch_size
+
+    def sched_admit(self, state, slot, request):
+        assert state[slot] is None, f"refill clobbered live slot {slot}"
+        self.admitted.append(request)
+        state = list(state)
+        state[slot] = {"req": request, "emitted": 0}
+        return state
+
+    def sched_step(self, state):
+        raise AssertionError("speculative backend: the scheduler must route "
+                             "through sched_spec_step, not sched_step")
+
+    def sched_spec_step(self, state):
+        B, K = self.batch_size, self.spec_k
+        tokens = np.full((B, K), -7, np.int64)  # poison past the window
+        n_acc = np.zeros(B, np.int64)
+        n_emit = np.zeros(B, np.int64)
+        alive = np.zeros(B, bool)
+        state = list(state)
+        for b, s in enumerate(state):
+            if s is None:
+                continue
+            req, t = s["req"], s["emitted"]
+            remaining = req.max_new_tokens - t
+            window = req._script[t:t + K]
+            tokens[b, :len(window)] = window
+            acc = self.accept(self.rounds, b)
+            assert 1 <= acc <= K
+            self.drafted += K - 1
+            self.accepted += acc - 1
+            # the engine's on-device masking: emit through the first stop in
+            # the accepted window, never past the budget
+            stop_at = K
+            for j in range(min(acc, len(window))):
+                if req.stop_token is not None and window[j] == req.stop_token:
+                    stop_at = j
+                    break
+            emit = min(acc, stop_at + 1, remaining)
+            n_acc[b], n_emit[b] = acc, emit
+            s["emitted"] = t + emit
+            stopped = stop_at < emit
+            if stopped or req.max_new_tokens - s["emitted"] <= 0:
+                state[b] = None
+            else:
+                alive[b] = True
+        self.rounds += 1
+        return state, tokens, n_acc, n_emit, alive
+
+
 def _make_workload(rng: random.Random, n_reqs: int):
     """Requests with unique scripted streams; some stop early, some have a
     zero budget (must complete without ever occupying a slot)."""
@@ -134,6 +203,76 @@ def test_scheduler_mid_run_submission(batch, n_extra, seed):
     admitted_nonzero = [r for r in initial + extra if r.max_new_tokens > 0]
     # extras arrive one at a time in order, so FIFO still == submission order
     assert backend.admitted == admitted_nonzero
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 12), st.integers(2, 4),
+       st.integers(0, 10_000))
+def test_spec_scheduler_invariants(batch, n_reqs, spec_k, seed):
+    """The speculative protocol under the same invariants as the scalar
+    one: ragged 1..spec_k windows reassemble into exactly the scripted
+    streams (no loss, duplication, reordering, or poison past n_emit), FIFO
+    admission holds, and the acceptance tallies match the backend's own
+    ground truth."""
+    rng = random.Random(seed)
+    backend = FakeSpecBackend(batch, spec_k=spec_k)
+    reqs, want = _make_workload(rng, n_reqs)
+    streamed = {id(r): [] for r in reqs}
+    sched = ContinuousScheduler(
+        backend, on_token=lambda r, t: streamed[id(r)].append(t))
+    for r in reqs:
+        sched.submit(r)
+    sched.run(max_steps=10_000)
+    for r, w in zip(reqs, want):
+        assert r.done
+        assert r.out == w, "ragged emission lost/duplicated/reordered tokens"
+        assert streamed[id(r)] == w
+    assert backend.admitted == [r for r in reqs if r.max_new_tokens > 0]
+    assert sched.stats.emitted_tokens == sum(len(w) for w in want)
+    assert sched.stats.spec_rounds == sched.stats.decode_steps
+    assert sched.stats.drafted_tokens == backend.drafted
+    assert sched.stats.accepted_drafted_tokens == backend.accepted
+    assert sum(sched.stats.accepted_by_rid.values()) == backend.accepted
+    assert set(sched.stats.accepted_by_rid) <= {r.rid for r in reqs}
+
+
+def test_spec_budget_exhausted_mid_window():
+    """A round that accepts MORE tokens than the request's remaining budget
+    must emit exactly the remainder, mark the request done, and free the
+    slot for the next queued request — the clip happens at n_emit while
+    n_acc (and the acceptance stats) keep the full accepted count."""
+    backend = FakeSpecBackend(1, spec_k=4, accept=lambda rnd, b: 4)
+    first = Request(prompt=[1], max_new_tokens=6)   # 6 = 4 + (2: mid-window)
+    first._script = list(range(100, 110))
+    second = Request(prompt=[1], max_new_tokens=3)
+    second._script = list(range(200, 210))
+    sched = ContinuousScheduler(backend)
+    sched.submit(first)
+    sched.submit(second)
+    sched.run(max_steps=100)
+    assert first.done and first.out == list(range(100, 106))
+    assert second.done and second.out == list(range(200, 203))
+    # round 2 accepted 4 but emitted 2 — stats keep the accepted count
+    assert sched.stats.accepted_drafted_tokens == backend.accepted
+    assert sched.stats.emitted_tokens == 9
+    # budget clipping stranded slots mid-round, yet no round was wasted:
+    # first took ceil rounds, second refilled the freed slot afterwards
+    assert sched.stats.spec_rounds == 2 + 1
+
+
+def test_spec_stop_token_mid_window():
+    """A stop token in the middle of an accepted window: emit through the
+    stop (inclusive), never past it, and free the slot that same round."""
+    backend = FakeSpecBackend(1, spec_k=4, accept=lambda rnd, b: 4)
+    req = Request(prompt=[1], max_new_tokens=8, stop_token=102)
+    req._script = list(range(100, 110))  # stop sits at window position 2
+    sched = ContinuousScheduler(backend)
+    sched.submit(req)
+    sched.run(max_steps=100)
+    assert req.done
+    assert req.out == [100, 101, 102], "must stop AT the stop token"
+    assert sched.stats.spec_rounds == 1
+    assert sched.stats.emitted_tokens == 3
 
 
 def test_submit_completed_request_rejected():

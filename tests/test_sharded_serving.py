@@ -233,14 +233,15 @@ _ORACLE_SCRIPT = textwrap.dedent("""
 """)
 
 
-def _run_oracle(arch: str, mesh: str, overrides: dict) -> dict:
+def _run_oracle(arch: str, mesh: str, overrides: dict,
+                script: str = _ORACLE_SCRIPT) -> dict:
     env = dict(os.environ,
                JAX_PLATFORMS="cpu",
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
                                        "src"))
     proc = subprocess.run(
-        [sys.executable, "-c", _ORACLE_SCRIPT, arch, mesh,
+        [sys.executable, "-c", script, arch, mesh,
          json.dumps(overrides)],
         capture_output=True, text=True, timeout=900, env=env)
     assert proc.returncode == 0, proc.stderr[-4000:]
@@ -273,6 +274,65 @@ def test_sharded_serve_matches_oracle_dense_model8():
                        "vocab_size": 512})
     assert out["sharded"] == out["base"], out
     assert all(len(s) == 6 for s in out["base"])
+
+
+_SPEC_ORACLE_SCRIPT = textwrap.dedent("""
+    import json, sys
+    import jax
+    assert len(jax.devices()) == 8, jax.devices()
+    from repro.configs.registry import get_smoke_config
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models.decode import quantize_for_serving
+    from repro.models.model import init_params
+    from repro.serving.engine import DecodeEngine, Request, SamplerConfig
+    from repro.serving.scheduler import ContinuousScheduler
+
+    arch, mesh_spec, overrides = sys.argv[1], sys.argv[2], json.loads(sys.argv[3])
+    cfg = get_smoke_config(arch).with_(**overrides)
+    served = quantize_for_serving(init_params(cfg, jax.random.PRNGKey(1)), cfg)
+    dcfg = cfg.with_(n_layers=1, name="qwen3-0.6b")
+    dparams = quantize_for_serving(init_params(dcfg, jax.random.PRNGKey(7)),
+                                   dcfg)
+
+    def serve(draft):
+        eng = DecodeEngine(served, cfg, batch_size=2, max_len=64,
+                           matmul_policy="fixed:ref", prefill_chunk=8,
+                           mesh=make_serving_mesh(mesh_spec),
+                           sampler=SamplerConfig(canonical_greedy=True),
+                           draft=draft, spec_k=4 if draft else 2)
+        reqs = [Request(prompt=[3 + i, 11, 2 + i], max_new_tokens=6)
+                for i in range(3)]
+        sched = ContinuousScheduler(eng, admission_budget=1)
+        for r in reqs:
+            sched.submit(r)
+        sched.run(max_steps=1000)
+        return [r.out for r in reqs], sched.stats
+
+    base, _ = serve(None)
+    spec, st = serve((dparams, dcfg))
+    print(json.dumps({"base": base, "spec": spec,
+                      "rounds": st.spec_rounds,
+                      "drafted": st.drafted_tokens,
+                      "accepted": st.accepted_drafted_tokens}))
+""")
+
+
+def test_sharded_spec_serve_matches_nonspec_1x8():
+    """Speculative serving on a pure-TP 1x8 mesh: the sharded verify (target
+    TP geometry) plus the replicated draft must stream byte-identical greedy
+    output to the sharded NON-speculative engine — both under the canonical
+    bf16-argmax greedy the speculative round is defined over.  A mismatched
+    1-layer random draft keeps acceptance partial, so rollback runs on the
+    sharded KV cache too."""
+    out = _run_oracle("bitnet-b1.58-2b", "1x8",
+                      {"n_layers": 2, "d_model": 128, "n_heads": 4,
+                       "n_kv_heads": 2, "head_dim": 32, "d_ff": 256,
+                       "vocab_size": 512},
+                      script=_SPEC_ORACLE_SCRIPT)
+    assert out["spec"] == out["base"], out
+    assert all(len(s) == 6 for s in out["base"])
+    assert out["rounds"] > 0 and out["drafted"] > 0, out
+    assert 0 <= out["accepted"] <= out["drafted"], out
 
 
 _PREFIX_ORACLE_SCRIPT = textwrap.dedent("""

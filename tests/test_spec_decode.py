@@ -1,0 +1,339 @@
+"""Speculative decoding: draft-and-verify on the continuous scheduler.
+
+Three layers of guarantee, each tested here:
+
+1. **Bitwise verify (dense).**  On dense (window=0) caches ``verify_step``
+   runs the scatter-first exact forward: its logits AND written KV are
+   bitwise what K sequential ``decode_step`` calls produce.  No tolerance —
+   ``==`` on every element, under both the reference and autotuned matmul
+   policies.
+2. **Exact rollback.**  ``snapshot_kv_window`` / ``rollback_kv_window``
+   restore the rejected suffix of a speculative write exactly, so the cache
+   after a partial acceptance equals the cache after the accepted tokens
+   alone (the ring-wrap half of this property lives in
+   ``test_window_decode.py``).
+3. **Byte-identical streams.**  The speculative continuous engine emits the
+   same greedy token streams as the non-speculative scheduler — for ANY
+   draft sharing the target's vocab, accepted or not — when the baseline
+   opts into the canonical bf16-argmax greedy selection
+   (``SamplerConfig(canonical_greedy=True)``) the speculative round is
+   defined over.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.models.decode import (decode_step, init_cache, prefill_into_slot,
+                                 quantize_for_serving, rollback_kv_window,
+                                 snapshot_kv_window, verify_step)
+from repro.models.model import init_params
+from repro.serving.engine import DecodeEngine, Request, SamplerConfig
+from repro.serving.scheduler import ContinuousScheduler
+
+
+def _dense_cfg(policy="fixed:ref", **over):
+    return get_smoke_config("bitnet-b1.58-2b").with_(
+        n_layers=3, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=256, loss_chunk=32, matmul_policy=policy, **over)
+
+
+def _ragged_prefill(p, cfg, B, CL, plens, rng):
+    """A batch cache with per-row prompts of different lengths (the state a
+    continuous scheduler actually verifies against)."""
+    cache = init_cache(cfg, B, CL)
+    for b in range(B):
+        toks = jnp.asarray(rng.integers(2, cfg.vocab_size - 2,
+                                        (1, plens[b])), jnp.int32)
+        cache, _ = prefill_into_slot(p, cfg, cache, {"tokens": toks},
+                                     b, int(plens[b]))
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# 1. dense verify is bitwise equal to sequential decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["fixed:ref", "auto"])
+def test_verify_step_bitwise_matches_sequential_dense(policy,
+                                                      tmp_autotune_cache):
+    """The load-bearing exactness claim: one batched K-candidate verify
+    forward produces BITWISE the logits and cache (k, v, pos) of K
+    sequential decode_step calls — per query the attended set, the
+    online-softmax partition boundaries, and the reduction order are
+    identical by construction, so there is nothing to be approximately
+    equal about."""
+    cfg = _dense_cfg(policy)
+    assert not cfg.window
+    p = quantize_for_serving(init_params(cfg, jax.random.PRNGKey(0)), cfg)
+    B, CL, K = 2, 32, 4
+    rng = np.random.default_rng(0)
+    for trial in range(3):
+        cache = _ragged_prefill(p, cfg, B, CL, [5, 9], rng)
+        cands = jnp.asarray(rng.integers(2, cfg.vocab_size - 2, (B, K)),
+                            jnp.int32)
+        start = jnp.asarray([5, 9], jnp.int32)
+
+        seq_cache, seq_logits = cache, []
+        for j in range(K):
+            logits, seq_cache = decode_step(p, cfg, seq_cache, cands[:, j],
+                                            start + j)
+            seq_logits.append(logits)
+        seq_logits = jnp.stack(seq_logits, 1)
+
+        vlogits, vcache = verify_step(p, cfg, cache, cands, start)
+        np.testing.assert_array_equal(np.asarray(vlogits),
+                                      np.asarray(seq_logits))
+        for leaf in ("k", "v", "pos"):
+            np.testing.assert_array_equal(
+                np.asarray(vcache[leaf], np.float32),
+                np.asarray(seq_cache[leaf], np.float32))
+
+
+def test_verify_step_dead_row_writes_nothing(key):
+    """A dead row (start = -1) must leave its cache row untouched — the
+    whole-row guard matters because -1 + j is a REAL position for j >= 1."""
+    cfg = _dense_cfg()
+    p = quantize_for_serving(init_params(cfg, key), cfg)
+    B, CL, K = 2, 32, 4
+    rng = np.random.default_rng(1)
+    cache = _ragged_prefill(p, cfg, B, CL, [5, 9], rng)
+    cands = jnp.asarray(rng.integers(2, 200, (B, K)), jnp.int32)
+    _, vcache = verify_step(p, cfg, cache, cands,
+                            jnp.asarray([5, -1], jnp.int32))
+    for leaf in ("k", "v", "pos"):
+        np.testing.assert_array_equal(  # row 1 was dead: bit-identical
+            np.asarray(vcache[leaf][:, 1], np.float32),
+            np.asarray(cache[leaf][:, 1], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# 2. snapshot/rollback exactness (dense; ring-wrap in test_window_decode.py)
+# ---------------------------------------------------------------------------
+
+
+def test_rollback_equals_sequential_prefix_dense(key):
+    """After verify + rollback(keep), the cache is bitwise the cache after
+    decoding only the first ``keep`` candidates — for every keep in 0..K,
+    per row independently."""
+    cfg = _dense_cfg()
+    p = quantize_for_serving(init_params(cfg, key), cfg)
+    B, CL, K = 2, 32, 4
+    rng = np.random.default_rng(2)
+    cache = _ragged_prefill(p, cfg, B, CL, [4, 11], rng)
+    cands = jnp.asarray(rng.integers(2, 200, (B, K)), jnp.int32)
+    start = jnp.asarray([4, 11], jnp.int32)
+    undo = snapshot_kv_window(cfg, cache, start, K)
+    _, vcache = verify_step(p, cfg, cache, cands, start)
+    for keep in [(0, K), (K, 0), (1, 3), (2, 2)]:
+        rolled = rollback_kv_window(cfg, vcache, undo,
+                                    jnp.asarray(keep, jnp.int32))
+        seq = cache
+        for j in range(max(keep)):
+            live = jnp.asarray([j < k for k in keep])
+            tok = jnp.where(live, cands[:, j], 0)
+            _, seq = decode_step(p, cfg, seq, tok,
+                                 jnp.where(live, start + j, -1))
+        for leaf in ("k", "v", "pos"):
+            np.testing.assert_array_equal(
+                np.asarray(rolled[leaf], np.float32),
+                np.asarray(seq[leaf], np.float32), err_msg=f"keep={keep}")
+
+
+# ---------------------------------------------------------------------------
+# 3. engine: speculative streams are byte-identical to non-speculative
+# ---------------------------------------------------------------------------
+
+
+def _mk_draft(cfg, layers=1, key_seed=7):
+    """A REAL mismatched draft: same vocab, fewer layers, different random
+    params — most proposals get rejected, which is exactly the case the
+    byte-identity guarantee has to survive."""
+    dcfg = cfg.with_(n_layers=layers, name="qwen3-0.6b")
+    dp = quantize_for_serving(
+        init_params(dcfg, jax.random.PRNGKey(key_seed)), dcfg)
+    return dp, dcfg
+
+
+def _pinned_requests():
+    rng = np.random.default_rng(3)
+    specs = [(5, 12), (11, 7), (3, 20), (9, 9), (17, 5)]
+    reqs = []
+    for i, (plen, budget) in enumerate(specs):
+        prompt = [int(t) for t in rng.integers(2, 250, plen)]
+        stop = 5 if i == 2 else None  # one request stops on a token
+        reqs.append(Request(prompt=prompt, max_new_tokens=budget,
+                            stop_token=stop))
+    return reqs
+
+
+def _serve(engine, reqs):
+    sched = ContinuousScheduler(engine)
+    for r in reqs:
+        sched.submit(r)
+    sched.run(max_steps=500)
+    return [list(r.out) for r in reqs], sched.stats
+
+
+def _byte_identity_engines(key, window=0, spec_prefix_cache=False):
+    """(baseline, speculative) engine pair; the baseline never has a prefix
+    store, so the composition test pins spec+cache against the plain
+    non-speculative engine directly."""
+    cfg = _dense_cfg(window=window)
+    p = quantize_for_serving(init_params(cfg, key), cfg)
+    draft = _mk_draft(cfg)
+    mk = lambda d: DecodeEngine(
+        p, cfg, batch_size=2, max_len=48, prefill_chunk=8,
+        matmul_policy="fixed:ref",
+        sampler=SamplerConfig(canonical_greedy=True),
+        prefix_cache=bool(d) and spec_prefix_cache,
+        draft=d, spec_k=4 if d else 2)
+    return mk(None), mk(draft)
+
+
+@pytest.mark.parametrize("window", [0, 8], ids=["dense", "windowed"])
+def test_spec_stream_byte_identical(key, window):
+    """End to end: the speculative scheduler's greedy streams equal the
+    non-speculative scheduler's byte for byte, with a low-acceptance
+    mismatched draft, mixed prompt lengths/budgets, a stop token, and slot
+    refills (5 requests through 2 slots).  The baseline engine opts into
+    canonical greedy; on the dense config the verify forward is bitwise
+    exact, on the windowed one the bf16 canonical grid absorbs the chunk
+    partition noise."""
+    base_eng, spec_eng = _byte_identity_engines(key, window=window)
+    base, _ = _serve(base_eng, _pinned_requests())
+    spec, stats = _serve(spec_eng, _pinned_requests())
+    assert spec == base
+    assert stats.spec_rounds > 0
+    # every round drafts spec_k - 1 = 3 candidates per live slot
+    assert 0 < stats.drafted_tokens
+    assert 0 <= stats.accepted_drafted_tokens <= stats.drafted_tokens
+    assert stats.emitted_tokens == sum(len(o) for o in spec)
+
+
+def test_spec_twin_draft_accepts_everything(key):
+    """A draft that IS the target (same params/config) must reach 100%
+    acceptance — every round emits the full spec_k window (modulo stop and
+    budget clipping) and decode_steps collapse accordingly."""
+    cfg = _dense_cfg()
+    p = quantize_for_serving(init_params(cfg, key), cfg)
+    reqs = [Request(prompt=[7 + i, 13 + i, 5], max_new_tokens=12)
+            for i in range(2)]
+    eng = DecodeEngine(p, cfg, batch_size=2, max_len=48, prefill_chunk=8,
+                       matmul_policy="fixed:ref", draft=(p, cfg), spec_k=4)
+    out, stats = _serve(eng, reqs)
+    assert stats.acceptance_rate == 1.0
+    assert all(len(o) == 12 for o in out)
+    # 24 tokens in ceil(12/4) = 3 rounds (both slots live throughout)
+    assert stats.spec_rounds == 3
+    base_eng = DecodeEngine(p, cfg, batch_size=2, max_len=48,
+                            prefill_chunk=8, matmul_policy="fixed:ref",
+                            sampler=SamplerConfig(canonical_greedy=True))
+    base, _ = _serve(base_eng, [Request(prompt=[7 + i, 13 + i, 5],
+                                        max_new_tokens=12)
+                                for i in range(2)])
+    assert out == base
+
+
+def test_spec_composes_with_prefix_cache(key):
+    """Prefix-cache splicing on the target + full draft prefill must yield
+    the same byte-identical streams: a second wave sharing a long prefix
+    hits the store, and the speculative warm-store output still equals the
+    NO-cache non-speculative baseline's."""
+    base_eng, spec_eng = _byte_identity_engines(key, spec_prefix_cache=True)
+
+    def waves():
+        shared = [int(t) for t in np.random.default_rng(9).integers(2, 250, 17)]
+        w1 = [Request(prompt=shared + [30 + i], max_new_tokens=6)
+              for i in range(2)]
+        w2 = [Request(prompt=shared + [40 + i], max_new_tokens=6)
+              for i in range(2)]
+        return w1 + w2
+
+    base, _ = _serve(base_eng, waves())
+    spec, stats = _serve(spec_eng, waves())
+    assert spec == base
+    assert stats.spec_rounds > 0
+    assert spec_eng.prefix_store.stats.hit_blocks > 0  # reuse actually fired
+
+
+def test_spec_per_request_acceptance_accounting(key):
+    """stats.accepted_by_rid: keyed on stable Request.rid, one entry per
+    admitted request, values summing to the global accepted count."""
+    cfg = _dense_cfg()
+    p = quantize_for_serving(init_params(cfg, key), cfg)
+    eng = DecodeEngine(p, cfg, batch_size=2, max_len=48, prefill_chunk=8,
+                       matmul_policy="fixed:ref", draft=(p, cfg), spec_k=3)
+    reqs = [Request(prompt=[3 + i, 4], max_new_tokens=6) for i in range(3)]
+    _, stats = _serve(eng, reqs)
+    assert set(stats.accepted_by_rid) == {r.rid for r in reqs}
+    assert sum(stats.accepted_by_rid.values()) == \
+        stats.accepted_drafted_tokens
+    assert len({r.rid for r in reqs}) == 3  # rids are distinct and stable
+
+
+def test_spec_compiles_one_trace_per_entry(key):
+    """The speculative path must stay as trace-frugal as the plain one: one
+    spec_step trace, one draft prefill bucket, one admit commit — across a
+    mixed-length request stream."""
+    cfg = _dense_cfg()
+    p = quantize_for_serving(init_params(cfg, key), cfg)
+    eng = DecodeEngine(p, cfg, batch_size=2, max_len=48, prefill_chunk=4,
+                       matmul_policy="fixed:ref", draft=_mk_draft(cfg),
+                       spec_k=3)
+    reqs = [Request(prompt=[2 + j for j in range(1 + i)], max_new_tokens=3)
+            for i in range(6)]  # prompt lengths 1..6: 1- and 2-chunk buckets
+    _serve(eng, reqs)
+    assert eng.trace_counts["spec_step"] == 1, eng.trace_counts
+    assert eng.trace_counts["prefill_chunk"] == 1, eng.trace_counts
+    assert eng.trace_counts["draft_prefill_chunk"] == 1, eng.trace_counts
+    assert eng.trace_counts["admit_commit"] == 1, eng.trace_counts
+    assert eng.trace_counts["sched_step"] == 0, eng.trace_counts
+
+
+# ---------------------------------------------------------------------------
+# constructor validation
+# ---------------------------------------------------------------------------
+
+
+def test_draft_vocab_mismatch_rejected(key):
+    cfg = _dense_cfg()
+    p = quantize_for_serving(init_params(cfg, key), cfg)
+    dcfg = cfg.with_(n_layers=1, vocab_size=128, name="qwen3-0.6b")
+    dp = quantize_for_serving(init_params(dcfg, key), dcfg)
+    with pytest.raises(ValueError, match="tokenizer mismatch"):
+        DecodeEngine(p, cfg, batch_size=2, max_len=48, draft=(dp, dcfg))
+
+
+def test_draft_requires_greedy(key):
+    cfg = _dense_cfg()
+    p = quantize_for_serving(init_params(cfg, key), cfg)
+    with pytest.raises(ValueError, match="temperature"):
+        DecodeEngine(p, cfg, batch_size=2, max_len=48, draft=(p, cfg),
+                     sampler=SamplerConfig(temperature=0.7))
+
+
+def test_spec_k_bounds_enforced(key):
+    cfg = _dense_cfg()
+    p = quantize_for_serving(init_params(cfg, key), cfg)
+    with pytest.raises(ValueError, match="spec_k"):
+        DecodeEngine(p, cfg, batch_size=2, max_len=48, draft=(p, cfg),
+                     spec_k=1)
+    wcfg = cfg.with_(window=8)
+    wp = quantize_for_serving(init_params(wcfg, key), wcfg)
+    with pytest.raises(ValueError, match="ring length"):
+        DecodeEngine(wp, wcfg, batch_size=2, max_len=48, draft=(wp, wcfg),
+                     spec_k=9)  # > CL=8: the verify window would self-collide
+
+
+def test_draft_arch_must_support_batched_verify(key):
+    cfg = _dense_cfg()
+    p = quantize_for_serving(init_params(cfg, key), cfg)
+    zcfg = get_smoke_config("zamba2-2.7b").with_(remat=False,
+                                                 vocab_size=cfg.vocab_size)
+    zp = quantize_for_serving(init_params(zcfg, key), zcfg)
+    with pytest.raises(ValueError, match="does not support"):
+        DecodeEngine(p, cfg, batch_size=2, max_len=48, draft=(zp, zcfg))

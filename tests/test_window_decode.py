@@ -7,7 +7,9 @@ import numpy as np
 import pytest
 
 from repro.configs.registry import get_smoke_config
-from repro.models.decode import cache_len, decode_step, init_cache, prefill, quantize_for_serving
+from repro.models.decode import (cache_len, decode_step, init_cache, prefill,
+                                 quantize_for_serving, rollback_kv_window,
+                                 snapshot_kv_window, verify_step)
 from repro.models.model import init_params
 
 
@@ -123,6 +125,56 @@ def test_windowed_prefill_ring_occupancy():
             np.testing.assert_array_equal(
                 np.sort(np.asarray(cache["pos"][0, b])),
                 np.arange(t - 7, t + 1))
+
+
+@pytest.mark.parametrize("S", [5, 12], ids=["pre-wrap", "wrapped"])
+def test_verify_rollback_restores_ring_across_wrap(S):
+    """The speculative undo property ON THE RING: a K-token verify window
+    that wraps the 8-slot ring evicts in-window keys; ``snapshot_kv_window``
+    → ``verify_step`` → ``rollback_kv_window(keep)`` must restore every
+    rejected slot's KV *and* position bit-for-bit — including the evicted
+    old positions and ``-1`` empties — while keeping the accepted prefix and
+    the canonical slot invariant.  ``keep=0`` is full undo: the cache must
+    equal the pre-verify cache exactly."""
+    cfg = get_smoke_config("bitnet-b1.58-2b").with_(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=256, loss_chunk=32, window=8, remat=False)
+    sp = quantize_for_serving(init_params(cfg, jax.random.PRNGKey(4)), cfg)
+    B, K = 2, 4
+    rng = np.random.default_rng(4)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, size=(B, S)), jnp.int32)
+    cache, _ = prefill(sp, cfg, {"tokens": toks}, s_max=64)
+    cands = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, K)), jnp.int32)
+    start = jnp.full((B,), S, jnp.int32)  # verify window: S..S+3 (wraps CL=8)
+
+    undo = snapshot_kv_window(cfg, cache, start, K)
+    _, vcache = verify_step(sp, cfg, cache, cands, start)
+    _assert_ring_occupancy(vcache)
+
+    for keep in range(K + 1):
+        rolled = rollback_kv_window(cfg, vcache, undo,
+                                    jnp.full((B,), keep, jnp.int32))
+        _assert_ring_occupancy(rolled)
+        pos = np.asarray(cache["pos"])  # pre-verify positions [L, B, CL]
+        vpos = np.asarray(vcache["pos"])
+        slots = np.asarray(undo["slot"])  # [B, K]
+        for leaf in ("k", "v", "pos"):
+            got = np.asarray(rolled[leaf], np.float32)
+            pre = np.asarray(cache[leaf], np.float32)
+            post = np.asarray(vcache[leaf], np.float32)
+            for b in range(B):
+                kept = set(slots[b, :keep].tolist())
+                for s in range(8):
+                    want = post if s in kept else pre
+                    np.testing.assert_array_equal(
+                        got[:, b, s], want[:, b, s],
+                        err_msg=f"keep={keep} leaf={leaf} row={b} slot={s}")
+        # rolled positions: accepted prefix advanced, suffix restored
+        rpos = np.asarray(rolled["pos"])
+        for b in range(B):
+            for j in range(K):
+                s = slots[b, j]
+                assert rpos[0, b, s] == (vpos if j < keep else pos)[0, b, s]
 
 
 def test_windowed_decode_matches_windowed_forward():
