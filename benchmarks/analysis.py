@@ -1,0 +1,333 @@
+"""SLO analysis over load-generator runs + BENCH_serving.json schema tools.
+
+Three jobs, one module:
+
+  * :func:`scenario_report` — turn a :class:`~repro.serving.loadgen.
+    LoadResult` into the per-tenant SLO section serving benchmarks emit:
+    p50/p95/p99 TTFT and TPOT per tenant, queue-wait summaries,
+    SLO-attainment (fraction of requests meeting BOTH the tenant's TTFT
+    and TPOT thresholds) and goodput (SLO-attaining completions per
+    second), plus a windowed TTFT trajectory so a PR diff shows *when*
+    in the run the tail degraded, not just that it did.
+  * :func:`saturation_sweep` — find max sustainable QPS: double the
+    arrival-rate scale until p99 TTFT blows the budget, then bisect the
+    bracket.  The classic open-loop saturation probe (cf. llm-d-benchmark
+    and the operating-point sweeps Bitnet.cpp reports), made cheap by the
+    virtual clock: each probe replays a freshly-generated trace
+    deterministically.
+  * :func:`check_schema` — the ONE place that knows what every
+    ``BENCH_serving.json`` schema version (v2..v5) must contain.  CI and
+    tests call this instead of each re-inventing field lists.
+
+Also a tiny CLI (no deps beyond the repo):
+
+    PYTHONPATH=src python benchmarks/analysis.py check BENCH_serving.json
+    PYTHONPATH=src python benchmarks/analysis.py diff OLD.json NEW.json
+
+``diff`` prints percentile deltas between two bench files (the PR-over-PR
+view CI surfaces); it is informational, never gating.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.serving.loadgen import LoadResult, latency_summary, percentile
+from repro.serving.workload import Scenario
+
+__all__ = ["scenario_report", "saturation_sweep", "check_schema",
+           "diff_benches"]
+
+
+# -- per-tenant SLO analysis -------------------------------------------------
+
+def _slo_ok(rec, ten) -> bool:
+    """A request attains its tenant's SLO iff it completed, its TTFT is
+    under budget, and (when it emitted >= 2 tokens, so TPOT is defined) its
+    TPOT is under budget too."""
+    if rec.t_done is None or rec.ttft_s is None:
+        return False
+    if rec.ttft_s > ten.slo_ttft_s:
+        return False
+    return rec.tpot_s is None or rec.tpot_s <= ten.slo_tpot_s
+
+
+def _trajectory(records, n_windows: int, ndigits: int = 6) -> list[dict]:
+    """p50/p95/p99 TTFT per arrival-time window — the tail's time course.
+    Windows are equal slices of the arrival span; empty windows report
+    zero percentiles (latency_summary of an empty sample)."""
+    done = [r for r in records if r.ttft_s is not None]
+    if not done:
+        return []
+    t0 = min(r.t_arrival for r in done)
+    t1 = max(r.t_arrival for r in done)
+    span = max(t1 - t0, 1e-9)
+    out = []
+    for w in range(n_windows):
+        lo = t0 + span * w / n_windows
+        hi = t0 + span * (w + 1) / n_windows
+        # last window has no upper bound so the final arrival always lands
+        # somewhere even when hi != t1 by a float ulp
+        vals = [r.ttft_s for r in done
+                if lo <= r.t_arrival and (r.t_arrival < hi
+                                          or w == n_windows - 1)]
+        out.append({"window": w, "t_start_s": round(lo - t0, ndigits),
+                    "requests": len(vals),
+                    "ttft_s": latency_summary(vals, ndigits)})
+    return out
+
+
+def scenario_report(scenario: Scenario, result: LoadResult, seed: int,
+                    n_windows: int = 4) -> dict:
+    """The schema-v5 ``workload`` section: per-tenant percentile + SLO
+    figures for one scenario replay.  All floats are rounded, so equal runs
+    serialize byte-identically (the CI diffability contract)."""
+    nd = 6
+    tenants = {t.name: t for t in scenario.tenants}
+    per_tenant: dict[str, dict] = {}
+    good_total = 0
+    for tname, recs in sorted(result.by_tenant().items()):
+        ten = tenants[tname]
+        good = sum(_slo_ok(r, ten) for r in recs)
+        good_total += good
+        per_tenant[tname] = {
+            "requests": len(recs),
+            "completed": sum(r.t_done is not None for r in recs),
+            "ttft_s": latency_summary(
+                [r.ttft_s for r in recs if r.ttft_s is not None], nd),
+            "tpot_s": latency_summary(
+                [r.tpot_s for r in recs if r.tpot_s is not None], nd),
+            "queue_wait_s": latency_summary(
+                [r.queue_wait_s for r in recs
+                 if r.queue_wait_s is not None], nd),
+            "slo": {"ttft_s": ten.slo_ttft_s, "tpot_s": ten.slo_tpot_s},
+            "slo_attainment": round(good / max(len(recs), 1), 4),
+            "goodput_qps": round(good / result.makespan_s, 4),
+        }
+    n = len(result.records)
+    return {
+        "scenario": scenario.name,
+        "seed": seed,
+        "clock": result.clock,
+        "requests": n,
+        "completed": sum(r.t_done is not None for r in result.records),
+        "offered_qps": round(result.offered_qps, 4),
+        "achieved_qps": round(result.achieved_qps, 4),
+        "makespan_s": round(result.makespan_s, nd),
+        "emitted_tokens": result.emitted_tokens,
+        "tenants": per_tenant,
+        "slo_attainment": round(good_total / max(n, 1), 4),
+        "goodput_qps": round(good_total / result.makespan_s, 4),
+        "ttft_trajectory": _trajectory(result.records, n_windows, nd),
+    }
+
+
+# -- saturation sweep --------------------------------------------------------
+
+def saturation_sweep(run_at, base_qps: float, slo_ttft_s: float, *,
+                     max_doublings: int = 3, bisect_iters: int = 4,
+                     log=None) -> dict:
+    """Max sustainable QPS by doubling then bisection.
+
+    ``run_at(scale)`` replays the scenario with every tenant's arrival rate
+    multiplied by ``scale`` and returns the run's p99 TTFT in seconds
+    (deterministic under the virtual clock, so the bracket is real, not
+    noise).  Scale 1.0 is probed first; while p99 stays under
+    ``slo_ttft_s`` the scale doubles (up to ``max_doublings``), then
+    ``bisect_iters`` rounds of bisection tighten the good/bad bracket.
+    Returns the probe list and ``max_sustainable_qps`` (largest probed QPS
+    whose p99 met budget; 0.0 if even scale 1.0 failed —
+    ``saturated=False`` flags a sweep that never found the wall, i.e. the
+    estimate is a lower bound)."""
+    probes: list[dict] = []
+
+    def probe(scale: float) -> bool:
+        p99 = float(run_at(scale))
+        ok = p99 <= slo_ttft_s
+        probes.append({"qps_scale": round(scale, 4),
+                       "qps": round(base_qps * scale, 4),
+                       "p99_ttft_s": round(p99, 6), "ok": ok})
+        if log is not None:
+            log(f"[saturation] scale {scale:.2f} ({base_qps * scale:.2f} "
+                f"qps): p99 ttft {p99:.4f}s "
+                f"({'ok' if ok else 'OVER'} vs {slo_ttft_s}s)")
+        return ok
+
+    lo, hi = 0.0, None  # lo: best passing scale; hi: smallest failing
+    scale = 1.0
+    for _ in range(max_doublings + 1):
+        if probe(scale):
+            lo = scale
+            scale *= 2.0
+        else:
+            hi = scale
+            break
+    if hi is not None and lo > 0.0:
+        for _ in range(bisect_iters):
+            mid = (lo + hi) / 2.0
+            if probe(mid):
+                lo = mid
+            else:
+                hi = mid
+    return {
+        "slo_ttft_s": slo_ttft_s,
+        "base_qps": round(base_qps, 4),
+        "probes": probes,
+        "max_sustainable_qps": round(base_qps * lo, 4),
+        "max_sustainable_scale": round(lo, 4),
+        # the wall was actually found (some probe failed); otherwise the
+        # estimate is only a lower bound at the doubling cap
+        "saturated": hi is not None,
+    }
+
+
+# -- schema checks -----------------------------------------------------------
+
+_PCT_KEYS = ("mean", "p50", "max")
+_PCT_TAIL_KEYS = ("mean", "p50", "p95", "p99", "max")
+
+
+def _need(d: dict, keys, where: str) -> None:
+    missing = [k for k in keys if k not in d]
+    if missing:
+        raise AssertionError(f"{where} missing fields: {missing}")
+
+
+def _check_path_section(sec: dict, where: str, v: int) -> None:
+    _need(sec, ("tokens", "seconds", "tok_s", "ttft_s"), where)
+    _need(sec["ttft_s"], _PCT_TAIL_KEYS if v >= 4 else _PCT_KEYS,
+          f"{where}.ttft_s")
+    if v >= 4:
+        _need(sec, ("tpot_s",), where)
+
+
+def check_schema(results: dict) -> int:
+    """Validate a BENCH_serving.json dict against its declared
+    ``schema_version`` (2..5 supported).  Raises AssertionError naming the
+    missing fields; returns the version.  This is the single source of
+    truth for back-compat field checks — CI and tests import it instead of
+    keeping their own lists."""
+    _need(results, ("schema_version",), "results")
+    v = results["schema_version"]
+    if v not in (2, 3, 4, 5):
+        raise AssertionError(f"unsupported schema_version {v!r}")
+    _need(results, ("arch", "batch"), "results")
+    mode = results.get("mode", "paths") if v >= 5 else "paths"
+    if mode not in ("paths", "scenario"):
+        raise AssertionError(f"unknown mode {mode!r} (schema v{v})")
+    # the v2..v4 sections are preserved in EVERY mode (the back-compat
+    # contract: a v5 scenario file still carries the classic comparison)
+    _need(results, ("generational", "continuous", "speedup"), "results")
+    _check_path_section(results["generational"], "generational", v)
+    _check_path_section(results["continuous"], "continuous", v)
+    if v >= 3:
+        _need(results["continuous"], ("queue_wait_s",), "continuous")
+        _need(results, ("prefix",), "results")
+        _need(results["prefix"], ("enabled",), "prefix")
+    if v >= 4:
+        _need(results, ("speculative",), "results")
+        _need(results["speculative"], ("enabled",), "speculative")
+        if results["speculative"].get("enabled"):
+            _need(results["speculative"],
+                  ("spec_k", "acceptance_rate", "byte_identical",
+                   "tokens_per_decode_step"), "speculative")
+    if v >= 5:
+        _need(results, ("seed", "mode"), "results")
+    if mode == "scenario":
+        _need(results, ("workload", "saturation", "request_mix"), "results")
+        w = results["workload"]
+        _need(w, ("scenario", "seed", "clock", "requests", "tenants",
+                  "slo_attainment", "goodput_qps", "offered_qps",
+                  "achieved_qps", "ttft_trajectory"), "workload")
+        if not w["tenants"]:
+            raise AssertionError("workload.tenants is empty")
+        for name, t in w["tenants"].items():
+            _need(t, ("requests", "ttft_s", "tpot_s", "queue_wait_s",
+                      "slo", "slo_attainment", "goodput_qps"),
+                  f"workload.tenants[{name}]")
+            _need(t["ttft_s"], _PCT_TAIL_KEYS,
+                  f"workload.tenants[{name}].ttft_s")
+            _need(t["tpot_s"], _PCT_TAIL_KEYS,
+                  f"workload.tenants[{name}].tpot_s")
+            if not 0.0 <= t["slo_attainment"] <= 1.0:
+                raise AssertionError(
+                    f"workload.tenants[{name}].slo_attainment "
+                    f"{t['slo_attainment']} outside [0, 1]")
+        if not 0.0 <= w["slo_attainment"] <= 1.0:
+            raise AssertionError(f"workload.slo_attainment "
+                                 f"{w['slo_attainment']} outside [0, 1]")
+        if results["saturation"] is not None:
+            _need(results["saturation"],
+                  ("probes", "max_sustainable_qps", "slo_ttft_s"),
+                  "saturation")
+    return v
+
+
+# -- PR-over-PR diff ---------------------------------------------------------
+
+def _walk_numeric(d, prefix=""):
+    """Flatten nested dicts to {dotted.path: number} (lists indexed)."""
+    out = {}
+    if isinstance(d, dict):
+        for k, v in d.items():
+            out.update(_walk_numeric(v, f"{prefix}{k}."))
+    elif isinstance(d, list):
+        for i, v in enumerate(d):
+            out.update(_walk_numeric(v, f"{prefix}{i}."))
+    elif isinstance(d, (int, float)) and not isinstance(d, bool):
+        out[prefix[:-1]] = float(d)
+    return out
+
+
+_DIFF_KEYS = ("tok_s", "ttft_s.p50", "ttft_s.p95", "ttft_s.p99",
+              "tpot_s.p50", "tpot_s.p99", "slo_attainment", "goodput_qps",
+              "max_sustainable_qps", "speedup", "acceptance_rate",
+              "prefix_hit_rate")
+
+
+def diff_benches(old: dict, new: dict, *, log=print) -> list[str]:
+    """Print the percentile/throughput deltas between two bench files
+    (suffix-matched against the interesting keys).  Informational only —
+    returns the printed lines, raises nothing on regressions."""
+    a, b = _walk_numeric(old), _walk_numeric(new)
+    lines = []
+    for path in sorted(set(a) | set(b)):
+        if not any(path == k or path.endswith("." + k)
+                   for k in _DIFF_KEYS):
+            continue
+        va, vb = a.get(path), b.get(path)
+        if va is None or vb is None:
+            lines.append(f"  {path}: "
+                         f"{'added' if va is None else 'removed'} "
+                         f"({va if vb is None else vb:g})")
+        elif va != vb:
+            rel = f" ({(vb - va) / abs(va):+.1%})" if va else ""
+            lines.append(f"  {path}: {va:g} -> {vb:g}{rel}")
+    if not lines:
+        lines = ["  no tracked metric changed"]
+    for ln in lines:
+        log(ln)
+    return lines
+
+
+def _main(argv: list[str]) -> int:
+    if len(argv) >= 2 and argv[0] == "check":
+        with open(argv[1]) as f:
+            v = check_schema(json.load(f))
+        print(f"[analysis] {argv[1]}: schema v{v} ok")
+        return 0
+    if len(argv) >= 3 and argv[0] == "diff":
+        with open(argv[1]) as f:
+            old = json.load(f)
+        with open(argv[2]) as f:
+            new = json.load(f)
+        print(f"[analysis] bench delta {argv[1]} -> {argv[2]}:")
+        diff_benches(old, new)
+        return 0
+    print("usage: analysis.py check FILE | diff OLD NEW", file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(_main(sys.argv[1:]))

@@ -101,32 +101,48 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 
 import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import analysis  # noqa: E402  (benchmarks/analysis.py, same directory)
 
 from repro.configs.registry import get_smoke_config
 from repro.models.decode import quantize_for_serving
 from repro.models.model import init_params
 from repro.serving.engine import DecodeEngine, Request, SamplerConfig
+from repro.serving.loadgen import (LoadGenerator, generate_trace,
+                                   latency_summary, percentile)
 from repro.serving.scheduler import ContinuousScheduler
+from repro.serving.workload import get_scenario
 
 
 def make_requests(n: int, short_new: int, long_new: int, long_every: int,
                   prompt_len: int, long_prompt_len: int,
-                  long_prompt_every: int, vocab: int) -> list[Request]:
-    """Doubly skewed workload: every ``long_every``-th request generates
-    ``long_new`` tokens (vs ``short_new``), and every
-    ``long_prompt_every``-th request carries a ``long_prompt_len`` prompt
-    (vs ``prompt_len``) — the admission-latency case."""
-    reqs = []
-    for i in range(n):
-        new = long_new if i % long_every == long_every - 1 else short_new
-        plen = long_prompt_len if i % long_prompt_every == long_prompt_every - 1 \
-            else prompt_len
-        prompt = [2 + ((7 * i + j) % (vocab - 3)) for j in range(plen)]
-        reqs.append(Request(prompt=prompt, max_new_tokens=new))
-    return reqs
+                  long_prompt_every: int, vocab: int,
+                  seed: int = 0) -> list[Request]:
+    """Doubly skewed workload, drawn from a seeded rng rather than one
+    hardcoded list: exactly ``n // long_every`` requests generate
+    ``long_new`` tokens (vs ``short_new``) and exactly
+    ``n // long_prompt_every`` carry a ``long_prompt_len`` prompt (vs
+    ``prompt_len``) — the admission-latency case — but their *positions*
+    in the arrival order and the prompt token *content* are sampled.  The
+    same seed reproduces the same workload byte-for-byte (the CI
+    tokens-equality check across batching paths relies on the exact
+    counts), while different seeds give genuinely different skew mixes."""
+    rng = np.random.default_rng([seed, 0x5EED])
+    budgets = np.full(n, short_new, np.int64)
+    budgets[rng.choice(n, n // long_every, replace=False)] = long_new
+    plens = np.full(n, prompt_len, np.int64)
+    plens[rng.choice(n, n // long_prompt_every, replace=False)] = \
+        long_prompt_len
+    return [Request(prompt=[int(t) for t in
+                            rng.integers(2, vocab - 1, size=int(plens[i]))],
+                    max_new_tokens=int(budgets[i]))
+            for i in range(n)]
 
 
 def make_shared_prefix_requests(n: int, prefix_len: int, suffix_len: int,
@@ -157,19 +173,10 @@ def make_shared_prefix_requests(n: int, prefix_len: int, suffix_len: int,
 def _ttft_summary(vals: list[float]) -> dict:
     """mean/p50/p95/p99/max over per-request latencies (TTFT or TPOT) —
     tail percentiles included because speculation (and admission budgeting)
-    claims are about the tail, not the mean.  Percentiles use the
-    nearest-rank index on the sorted sample (exact for small n)."""
-    vals = sorted(vals)
-    n = len(vals)
-
-    def pct(p):
-        return vals[min(n - 1, int(p * n))]
-
-    return {"mean": round(sum(vals) / n, 4),
-            "p50": round(pct(0.50), 4),
-            "p95": round(pct(0.95), 4),
-            "p99": round(pct(0.99), 4),
-            "max": round(vals[-1], 4)}
+    claims are about the tail, not the mean.  Delegates to the repo's
+    shared estimator (linear-interpolation percentiles, cross-checked
+    against numpy in tests/test_workload.py)."""
+    return latency_summary(vals, ndigits=4)
 
 
 def _tpot_summary(token_times: dict[int, list[float]]) -> dict:
@@ -449,6 +456,73 @@ def bench_speculative(args, cfg, mesh) -> dict:
     return out
 
 
+def bench_scenario(args, cfg, served, mesh, budget) -> tuple[dict, dict | None]:
+    """Replay a named multi-tenant scenario through the load generator and
+    report the schema-v5 ``workload`` section (per-tenant p50/p95/p99
+    TTFT+TPOT, SLO attainment, goodput) plus, with ``--saturate``, the
+    doubling+bisection sweep for max sustainable QPS.
+
+    One engine serves every probe (same compiled traces; scaling changes
+    arrival rates, never shapes).  Under the default virtual clock each run
+    is fully deterministic — same seed, byte-identical ``workload`` section
+    — and compile time cannot pollute the metrics; ``--clock wall``
+    measures real time instead (a warmup replay absorbs compilation)."""
+    scenario = get_scenario(args.scenario)
+    if args.smoke:
+        scenario = scenario.smoke()
+    if args.qps_scale != 1.0:
+        scenario = scenario.scaled(args.qps_scale)
+    max_len = scenario.max_prompt_len() + scenario.max_new_tokens() + 1
+    max_len = -(-max_len // 16) * 16
+    engine = DecodeEngine(served, cfg, batch_size=args.batch,
+                          max_len=max_len, matmul_policy=args.policy,
+                          prefill_chunk=args.prefill_chunk, mesh=mesh,
+                          prefix_cache=args.prefix_cache,
+                          prefix_cache_mb=args.prefix_cache_mb)
+
+    def run_at(scale: float, clock: str):
+        sc = scenario.scaled(scale) if scale != 1.0 else scenario
+        trace = generate_trace(sc, cfg.vocab_size, args.seed)
+        gen = LoadGenerator(engine, trace, clock=clock,
+                            decode_step_cost_s=args.step_cost_decode,
+                            prefill_chunk_cost_s=args.step_cost_prefill,
+                            admission_budget=budget)
+        return sc, gen.run()
+
+    if args.clock == "wall":
+        run_at(1.0, "wall")  # warmup: compile every chunk/step trace
+    sc, result = run_at(1.0, args.clock)
+    workload = analysis.scenario_report(sc, result, args.seed)
+    for name, t in workload["tenants"].items():
+        print(f"[serving_bench] scenario {scenario.name}/{name}: "
+              f"{t['requests']} reqs, ttft p50/p99 {t['ttft_s']['p50']:.4f}/"
+              f"{t['ttft_s']['p99']:.4f}s, tpot p50 {t['tpot_s']['p50']:.4f}"
+              f"s, slo attainment {t['slo_attainment']:.0%}")
+    print(f"[serving_bench] scenario {scenario.name}: offered "
+          f"{workload['offered_qps']:.2f} qps, achieved "
+          f"{workload['achieved_qps']:.2f} qps, overall attainment "
+          f"{workload['slo_attainment']:.0%}, goodput "
+          f"{workload['goodput_qps']:.2f} qps")
+    saturation = None
+    if args.saturate:
+
+        def p99_at(scale):
+            _, res = run_at(scale, "virtual")
+            return percentile([r.ttft_s for r in res.records
+                               if r.ttft_s is not None], 99)
+
+        saturation = analysis.saturation_sweep(
+            p99_at, scenario.offered_qps(), scenario.slo_ttft_budget(),
+            max_doublings=args.saturate_doublings,
+            bisect_iters=args.saturate_bisects, log=print)
+        print(f"[serving_bench] scenario {scenario.name}: max sustainable "
+              f"{saturation['max_sustainable_qps']:.2f} qps at p99 ttft <= "
+              f"{saturation['slo_ttft_s']}s "
+              f"({'bracketed' if saturation['saturated'] else 'lower bound'}"
+              f", {len(saturation['probes'])} probes)")
+    return workload, saturation
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="bitnet-b1.58-2b")
@@ -514,6 +588,36 @@ def main():
                     "mesh, e.g. 1x8; axis product must equal the device "
                     "count (CPU: XLA_FLAGS=--xla_force_host_platform_"
                     "device_count=N)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload seed: the skewed request mix AND any "
+                    "--scenario arrival trace are drawn from it "
+                    "deterministically")
+    ap.add_argument("--scenario", default=None,
+                    help="also replay a named multi-tenant workload "
+                    "(chat | rag | agentic | code) through the open-loop "
+                    "load generator and emit the schema-v5 'workload' "
+                    "section (per-tenant p50/p95/p99 TTFT+TPOT, SLO "
+                    "attainment, goodput)")
+    ap.add_argument("--clock", default="virtual",
+                    choices=("virtual", "wall"),
+                    help="scenario clock: 'virtual' (deterministic "
+                    "simulated time, byte-reproducible percentiles) or "
+                    "'wall' (real time on this machine)")
+    ap.add_argument("--qps-scale", type=float, default=1.0,
+                    help="multiply every tenant's arrival rate in the "
+                    "measured scenario run")
+    ap.add_argument("--saturate", action="store_true",
+                    help="run the doubling+bisection saturation sweep and "
+                    "report max sustainable QPS (p99 TTFT under the "
+                    "scenario's loosest tenant budget); virtual clock only")
+    ap.add_argument("--saturate-doublings", type=int, default=3,
+                    help="rate doublings before declaring a lower bound")
+    ap.add_argument("--saturate-bisects", type=int, default=3,
+                    help="bisection rounds after the first failing probe")
+    ap.add_argument("--step-cost-decode", type=float, default=0.01,
+                    help="virtual-clock seconds per decode step")
+    ap.add_argument("--step-cost-prefill", type=float, default=0.02,
+                    help="virtual-clock seconds per prefill chunk")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
 
@@ -536,20 +640,27 @@ def main():
         return make_requests(args.requests, args.short_new, args.long_new,
                              args.long_every, args.prompt_len,
                              args.long_prompt_len, args.long_prompt_every,
-                             cfg.vocab_size)
+                             cfg.vocab_size, seed=args.seed)
 
-    results = {"schema_version": 4, "arch": cfg.name, "batch": args.batch,
+    request_mix = {"requests": args.requests,
+                   "short_new": args.short_new,
+                   "long_new": args.long_new,
+                   "long_every": args.long_every,
+                   "prompt_len": args.prompt_len,
+                   "long_prompt_len": args.long_prompt_len,
+                   "long_prompt_every": args.long_prompt_every}
+    # schema v5: + "seed", + "mode" ("paths" | "scenario").  In scenario
+    # mode the "workload" key carries the per-tenant scenario report (the
+    # classic request-mix params move to "request_mix"); in paths mode
+    # "workload" keeps its v2+ meaning, so old consumers are untouched.
+    mode = "scenario" if args.scenario else "paths"
+    results = {"schema_version": 5, "arch": cfg.name, "batch": args.batch,
                "policy": args.policy, "smoke": bool(args.smoke),
-               "mesh": args.mesh,
+               "mesh": args.mesh, "mode": mode, "seed": args.seed,
                "prefill_chunk": args.prefill_chunk,
                "admission_budget": args.admission_budget,
-               "workload": {"requests": args.requests,
-                            "short_new": args.short_new,
-                            "long_new": args.long_new,
-                            "long_every": args.long_every,
-                            "prompt_len": args.prompt_len,
-                            "long_prompt_len": args.long_prompt_len,
-                            "long_prompt_every": args.long_prompt_every}}
+               ("request_mix" if mode == "scenario" else "workload"):
+               request_mix}
     paths = [("generational", run_generational),
              ("continuous",
               lambda e, r: run_continuous(e, r, admission_budget=budget))]
@@ -581,6 +692,10 @@ def main():
                          if args.prefix_cache else {"enabled": False})
     results["speculative"] = (bench_speculative(args, cfg, mesh)
                               if args.draft else {"enabled": False})
+    if args.scenario:
+        results["workload"], results["saturation"] = bench_scenario(
+            args, cfg, served, mesh, budget)
+    analysis.check_schema(results)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)
         f.write("\n")

@@ -11,7 +11,16 @@ Usage:
       [--discipline continuous|generational] [--stream] \
       [--prefill-chunk 32] [--admission-budget 1] [--mesh 1x8] \
       [--prefix-cache] [--prefix-cache-mb 64] \
-      [--draft qwen3-0.6b] [--spec-k 4]
+      [--draft qwen3-0.6b] [--spec-k 4] [--dynamic-spec-k] \
+      [--scenario chat|rag|agentic|code] [--scenario-seed 0]
+
+``--scenario NAME`` replaces the fixed request list with a named
+multi-tenant workload (see ``repro.serving.workload``) replayed open-loop
+under the wall clock: requests arrive on each tenant's stochastic arrival
+process, queue for real, and the launcher prints per-tenant p50/p95/p99
+TTFT+TPOT plus SLO attainment.  The deterministic virtual-clock variant
+(for CI-diffable numbers and saturation sweeps) lives in
+``benchmarks/serving_bench.py --scenario``.
 
 ``--draft <arch>`` turns on draft-and-verify speculative decoding on the
 continuous path: the (replicated, randomly-initialized here — pass a real
@@ -103,6 +112,18 @@ def main():
                     "projections: int8 quantizes per token (absmax) in "
                     "front of every packed matmul — the W1.58A8 end-to-end "
                     "path (dispatch routes w2a8/grouped_w2a8/tl2)")
+    ap.add_argument("--scenario", default=None,
+                    help="replay a named multi-tenant workload (chat | rag "
+                    "| agentic | code) open-loop under the WALL clock "
+                    "instead of the fixed request list, and print "
+                    "per-tenant p50/p95/p99 TTFT+TPOT and SLO attainment "
+                    "(continuous only; --smoke shrinks the scenario too)")
+    ap.add_argument("--scenario-seed", type=int, default=0,
+                    help="arrival-trace seed for --scenario")
+    ap.add_argument("--dynamic-spec-k", action="store_true",
+                    help="with --draft: size each request's next draft "
+                    "window from its measured acceptance, clamped to "
+                    "[2, --spec-k]")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -139,6 +160,22 @@ def main():
         print(f"[serve] draft {dcfg.name}: spec_k={args.spec_k}, packed "
               f"{packed_bits_per_weight(draft_params):.3f} b/w")
         draft = (draft_params, dcfg)
+    scenario = None
+    if args.scenario:
+        if args.discipline != "continuous":
+            raise SystemExit("[serve] --scenario requires --discipline "
+                             "continuous (open-loop arrivals need slot "
+                             "refills)")
+        from repro.serving.workload import get_scenario
+
+        scenario = get_scenario(args.scenario)
+        if args.smoke:
+            scenario = scenario.smoke()
+        need = scenario.max_prompt_len() + scenario.max_new_tokens() + 1
+        if args.max_len < need:  # the scenario dictates the geometry
+            args.max_len = -(-need // 16) * 16
+            print(f"[serve] scenario {scenario.name}: max_len raised to "
+                  f"{args.max_len}")
     engine = DecodeEngine(served, cfg, batch_size=args.batch,
                           max_len=args.max_len,
                           sampler=SamplerConfig(temperature=args.temperature,
@@ -147,6 +184,35 @@ def main():
                           prefix_cache=args.prefix_cache,
                           prefix_cache_mb=args.prefix_cache_mb,
                           draft=draft, spec_k=args.spec_k)
+    if scenario is not None:
+        from repro.serving.loadgen import (LoadGenerator, generate_trace,
+                                           latency_summary)
+
+        trace = generate_trace(scenario, cfg.vocab_size, args.scenario_seed)
+        budget = args.admission_budget if args.admission_budget > 0 else None
+        gen = LoadGenerator(engine, trace, clock="wall",
+                            admission_budget=budget,
+                            dynamic_spec_k=args.dynamic_spec_k)
+        res = gen.run()
+        print(f"[serve] scenario {scenario.name} (seed "
+              f"{args.scenario_seed}): {len(res.records)} requests, "
+              f"offered {res.offered_qps:.2f} qps, achieved "
+              f"{res.achieved_qps:.2f} qps, makespan {res.makespan_s:.2f}s")
+        tenants = {t.name: t for t in scenario.tenants}
+        for name, recs in sorted(res.by_tenant().items()):
+            ttft = latency_summary(
+                [r.ttft_s for r in recs if r.ttft_s is not None], 4)
+            tpot = latency_summary(
+                [r.tpot_s for r in recs if r.tpot_s is not None], 4)
+            ten = tenants[name]
+            ok = sum(1 for r in recs
+                     if r.ttft_s is not None and r.ttft_s <= ten.slo_ttft_s
+                     and (r.tpot_s is None or r.tpot_s <= ten.slo_tpot_s))
+            print(f"[serve]   {name}: {len(recs)} reqs | ttft p50/p95/p99 "
+                  f"{ttft['p50']}/{ttft['p95']}/{ttft['p99']}s | tpot p50 "
+                  f"{tpot['p50']}s | slo attainment {ok / len(recs):.0%}")
+        return
+
     n_req = args.requests if args.requests is not None else args.batch
     reqs = [Request(prompt=[7 + i, 13 + i], max_new_tokens=args.new_tokens)
             for i in range(n_req)]
@@ -164,7 +230,8 @@ def main():
             if args.stream else None
         budget = args.admission_budget if args.admission_budget > 0 else None
         sched = ContinuousScheduler(engine, on_token=on_token,
-                                    admission_budget=budget)
+                                    admission_budget=budget,
+                                    dynamic_spec_k=args.dynamic_spec_k)
         for r in reqs:
             sched.submit(r)
         sched.run()

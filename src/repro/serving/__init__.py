@@ -1,10 +1,20 @@
 """repro.serving subsystem: the batched decode engine, the
-continuous-batching scheduler that drives it, and the hashed shared-prefix
-KV block store admission reuses."""
+continuous-batching scheduler that drives it, the hashed shared-prefix
+KV block store admission reuses, and the workload/load-generation layer
+that measures it all under multi-tenant traffic."""
 
 from repro.serving.engine import DecodeEngine, Request, SamplerConfig
+from repro.serving.loadgen import (ArrivalEvent, LoadGenerator, LoadResult,
+                                   RequestRecord, generate_trace,
+                                   latency_summary, percentile)
 from repro.serving.prefix_cache import PrefixBlockStore, PrefixStoreStats
 from repro.serving.scheduler import ContinuousScheduler, ScheduleBackend
+from repro.serving.workload import (SCENARIOS, ArrivalProcess, Dist,
+                                    Scenario, TenantSpec, get_scenario)
 
 __all__ = ["DecodeEngine", "Request", "SamplerConfig", "ContinuousScheduler",
-           "ScheduleBackend", "PrefixBlockStore", "PrefixStoreStats"]
+           "ScheduleBackend", "PrefixBlockStore", "PrefixStoreStats",
+           "Dist", "ArrivalProcess", "TenantSpec", "Scenario", "SCENARIOS",
+           "get_scenario", "ArrivalEvent", "RequestRecord", "LoadResult",
+           "LoadGenerator", "generate_trace", "percentile",
+           "latency_summary"]

@@ -104,6 +104,10 @@ class Request:
     on_token: Callable[["Request", int], None] | None = None
     out: list[int] = field(default_factory=list)
     done: bool = False
+    #: traffic class this request belongs to (multi-tenant workload replay);
+    #: None for direct API use — the engine never reads it, but scheduler
+    #: stats and the load-generator's SLO analysis group by it
+    tenant: str | None = None
     #: stable monotonically-assigned request id — the key for any per-request
     #: bookkeeping map (TTFT/TPOT/acceptance).  ``id(request)`` is NOT safe
     #: for that: CPython reuses object ids after GC, so a long-running server
@@ -381,7 +385,7 @@ class DecodeEngine:
                 donate_argnums=(2,),
                 **shardings(
                     (getattr(self, "_psh", None), repl,
-                     getattr(self, "_state_sh", None)),
+                     getattr(self, "_state_sh", None), repl),
                     (getattr(self, "_state_sh", None), repl, repl, repl,
                      repl)))
         if self.prefix_store is not None:
@@ -701,6 +705,16 @@ class DecodeEngine:
         Dead rows (``live = False``) verify at position -1: no KV/pos write
         lands and ``n_acc = n_emit = 0``.  Returns ``(state, cands [B, K],
         n_acc [B], n_emit [B], alive [B])``.
+
+        ``window`` (traced, [B] int32 in ``[2, K]``) caps the accepted
+        prefix per slot: candidates at positions ``>= window[b]`` are
+        treated as rejected, so ``n_acc[b] <= window[b]``.  The draft scan
+        and verify still run all K positions — ONE compiled trace serves
+        every window combination, and the rollback already rewinds whatever
+        was not accepted — so ``window[b] = K`` reproduces the fixed-K round
+        bit-for-bit.  The scheduler's dynamic-``spec_k`` policy sizes this
+        from measured acceptance (the saved work shows up in the acceptance
+        accounting, which charges only ``window - 1`` drafts per round).
         """
         from repro.kernels.dispatch import shard_scope
         from repro.models.decode import (rollback_kv_window,
@@ -709,7 +723,7 @@ class DecodeEngine:
         cfg, dcfg, K = self.cfg, self.draft_cfg, self.spec_k
         dinfo = self._shard_infos.get("spec_draft")
 
-        def step(p, dp, state):
+        def step(p, dp, state, window):
             live = state["live"]
             index = state["index"]
             B = live.shape[0]
@@ -734,8 +748,12 @@ class DecodeEngine:
             vlogits, cache = verify_step(p, cfg, state["cache"], cands, start)
             pred = greedy_tokens(vlogits)  # [B, K]
             # accepted prefix: candidate j (>=1) must equal the target's
-            # argmax after consuming candidates 0..j-1; c0 is always accepted
-            match = (cands[:, 1:] == pred[:, :-1]).astype(jnp.int32)
+            # argmax after consuming candidates 0..j-1 AND sit inside the
+            # slot's draft window; c0 is always accepted
+            in_win = jnp.arange(1, K, dtype=jnp.int32)[None, :] < \
+                window[:, None]
+            match = ((cands[:, 1:] == pred[:, :-1]) & in_win).astype(
+                jnp.int32)
             n_acc = jnp.where(
                 live, 1 + jnp.sum(jnp.cumprod(match, axis=1), axis=1), 0)
             # stop/budget masking over the accepted window: emit up to (and
@@ -1012,17 +1030,30 @@ class DecodeEngine:
         state, toks, alive = self._sched_step_fn(self.params, state, k)
         return state, np.asarray(toks), np.asarray(alive)
 
-    def sched_spec_step(self, state: dict):
+    #: sched_spec_step accepts per-slot draft windows (dynamic spec_k)
+    spec_window_aware = True
+
+    def sched_spec_step(self, state: dict, window=None):
         """One speculative round (ScheduleBackend accept/rollback protocol).
         Returns ``(state, cands [B, K], n_acc [B], n_emit [B], alive [B])``:
         slot ``b`` emits ``cands[b, :n_emit[b]]`` — every emitted token is
         the target's own greedy choice; ``n_acc - 1`` of them (live rows)
-        were drafted.  Greedy only; requires a ``draft`` at construction."""
+        were drafted.  ``window`` (length-B ints in ``[2, spec_k]``, None =
+        full ``spec_k`` everywhere) caps each slot's accepted prefix — same
+        compiled trace either way.  Greedy only; requires a ``draft`` at
+        construction."""
         if not self.spec_k:
             raise RuntimeError("sched_spec_step requires draft= at engine "
                                "construction")
+        if window is None:
+            w = np.full((self.B,), self.spec_k, np.int32)
+        else:
+            w = np.asarray(window, np.int32)
+            if w.shape != (self.B,):
+                raise ValueError(f"window must have shape ({self.B},), got "
+                                 f"{w.shape}")
         state, cands, n_acc, n_emit, alive = self._spec_step_fn(
-            self.params, self.draft_params, state)
+            self.params, self.draft_params, state, w)
         return (state, np.asarray(cands), np.asarray(n_acc),
                 np.asarray(n_emit), np.asarray(alive))
 

@@ -79,6 +79,15 @@ class ScheduleBackend(Protocol):
     acceptance-rate numerator).  When present, the scheduler drives
     ``sched_spec_step`` instead of ``sched_step`` and fans the ragged
     multi-token windows out to the per-token streaming callbacks.
+
+    A speculative backend may further advertise **per-slot draft windows**
+    with a truthy ``spec_window_aware`` attribute, meaning
+    ``sched_spec_step(state, window)`` accepts a length-``B`` sequence of
+    ints in ``[2, spec_k]`` and slot ``b`` drafts/verifies only
+    ``window[b]`` positions this round (``n_acc[b] <= window[b]``).  This
+    is what ``ContinuousScheduler(dynamic_spec_k=True)`` drives: requests
+    whose measured acceptance is low get a short window next round, so a
+    hostile request stops paying for ``spec_k - 1`` wasted drafts forever.
     """
 
     batch_size: int
@@ -106,8 +115,14 @@ class SchedulerStats:
     #: per-request wall-clock wait from ``submit()`` to backend admission,
     #: in admission order — the fairness cost of cache-affinity reordering
     #: is visible here next to the TTFT it buys (zero-budget requests never
-    #: occupy a slot and are excluded)
+    #: occupy a slot and are excluded).  Recorded uniformly on EVERY
+    #: admission path (pure FIFO, affinity reorder, atomic, incremental),
+    #: and mirrored per request in :attr:`queue_wait_by_rid` so per-tenant
+    #: analysis can attribute waits instead of reporting zeros
     queue_wait_s: list[float] = field(default_factory=list)
+    #: the same waits keyed on ``Request.rid`` (what the load-generator's
+    #: per-tenant SLO analysis joins against)
+    queue_wait_by_rid: dict[int, float] = field(default_factory=dict)
     #: admissions that jumped ahead of an older queued request on cache
     #: affinity (0 under pure FIFO)
     affinity_reorders: int = 0
@@ -121,6 +136,9 @@ class SchedulerStats:
     accepted_drafted_tokens: int = 0
     #: per-request accepted-drafted-token counts keyed on ``Request.rid``
     accepted_by_rid: dict[int, int] = field(default_factory=dict)
+    #: per-request draft window used in the most recent speculative round
+    #: (only populated under ``dynamic_spec_k=True``)
+    spec_window_by_rid: dict[int, int] = field(default_factory=dict)
 
     @property
     def decode_steps(self) -> int:
@@ -153,7 +171,10 @@ class ContinuousScheduler:
                  on_token: Callable[[Request, int], None] | None = None,
                  admission_budget: int | None = None,
                  cache_affinity: bool = True, affinity_window: int = 8,
-                 max_affinity_skips: int = 4):
+                 max_affinity_skips: int = 4,
+                 clock: Callable[[], float] | None = None,
+                 dynamic_spec_k: bool = False,
+                 spec_acc_ewma: float = 0.5):
         """``admission_budget`` caps how many prefill chunks advance per
         :meth:`step` across all in-flight admissions (None = finish each
         admission within the step it starts).  With a budget, a long prompt
@@ -173,13 +194,34 @@ class ContinuousScheduler:
         ``max_affinity_skips`` times it is admitted unconditionally — every
         request reaches the head after at most ``queue position``
         admissions, so no request starves behind an endless stream of
-        cache-hot arrivals."""
+        cache-hot arrivals.
+
+        ``clock`` is the time source for queue-wait accounting (default
+        ``time.perf_counter``).  A virtual-clock load generator injects its
+        own clock here so submit→admit waits are measured in simulated
+        seconds, not wall time.
+
+        ``dynamic_spec_k`` (speculative backends advertising
+        ``spec_window_aware`` only) sizes each request's next draft window
+        from its measured acceptance: an EWMA of the per-round accepted
+        fraction (weight ``spec_acc_ewma`` on the newest round, optimistic
+        start at 1.0) maps to a window clamped to ``[2, spec_k]`` — a
+        request whose drafts keep getting rejected quickly shrinks to
+        window 2 (one drafted token per round) while well-predicted
+        requests keep the full ``spec_k``."""
         if admission_budget is not None and admission_budget < 1:
             raise ValueError("admission_budget must be >= 1 (or None)")
         if affinity_window < 1:
             raise ValueError("affinity_window must be >= 1")
         if max_affinity_skips < 0:
             raise ValueError("max_affinity_skips must be >= 0")
+        if not 0.0 < spec_acc_ewma <= 1.0:
+            raise ValueError("spec_acc_ewma must be in (0, 1]")
+        if dynamic_spec_k and getattr(backend, "spec_k", 0) >= 2 and \
+                not getattr(backend, "spec_window_aware", False):
+            raise ValueError(
+                "dynamic_spec_k needs a backend whose sched_spec_step "
+                "accepts per-slot windows (spec_window_aware)")
         self.backend = backend
         self.B = backend.batch_size
         self.on_token = on_token
@@ -187,9 +229,14 @@ class ContinuousScheduler:
         self.cache_affinity = cache_affinity
         self.affinity_window = affinity_window
         self.max_affinity_skips = max_affinity_skips
+        self.clock = clock if clock is not None else time.perf_counter
+        self.dynamic_spec_k = dynamic_spec_k
+        self.spec_acc_ewma = spec_acc_ewma
+        #: request.rid → EWMA of per-round accepted-draft fraction
+        self._acc_ewma: dict[int, float] = {}
         #: request.rid → times an affinity pick jumped it while queued
         self._skips: dict[int, int] = {}
-        #: request.rid → perf_counter() at submit (queue-wait accounting)
+        #: request.rid → clock() at submit (queue-wait accounting)
         self._enqueue_t: dict[int, float] = {}
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * self.B
@@ -227,7 +274,7 @@ class ContinuousScheduler:
         within the affinity window).  Safe to call mid-run, between steps."""
         if request.done:
             raise ValueError("request already completed; submit a fresh one")
-        self._enqueue_t[request.rid] = time.perf_counter()
+        self._enqueue_t[request.rid] = self.clock()
         self.queue.append(request)
 
     def _pop_next(self) -> Request:
@@ -261,7 +308,9 @@ class ContinuousScheduler:
     def _record_admission(self, req: Request) -> None:
         t0 = self._enqueue_t.pop(req.rid, None)
         if t0 is not None:
-            self.stats.queue_wait_s.append(time.perf_counter() - t0)
+            wait = self.clock() - t0
+            self.stats.queue_wait_s.append(wait)
+            self.stats.queue_wait_by_rid[req.rid] = wait
 
     def _admit_free_slots(self) -> None:
         start = getattr(self.backend, "sched_admit_start", None)
@@ -350,24 +399,50 @@ class ContinuousScheduler:
         self.stats.steps += 1
         return finished
 
+    def _spec_window(self, req: Request, K: int) -> int:
+        """Next-round draft window for ``req`` from its acceptance EWMA:
+        optimistic full window until evidence arrives, then
+        ``2 + round(ewma * (K - 2))`` — clamped to ``[2, K]`` so every
+        round still verifies at least one drafted token (window 2 = the
+        cheapest speculative round; falling back to plain decode would
+        forfeit the chance to ever re-measure acceptance)."""
+        ewma = self._acc_ewma.get(req.rid, 1.0)
+        return max(2, min(K, 2 + int(round(ewma * (K - 2)))))
+
     def _spec_step(self) -> list[Request]:
         """One speculative round: every live slot emits a ragged 1..spec_k
         token window (the backend already rolled back rejected candidates),
         streaming callbacks fire per token in order, and acceptance is
-        tallied globally and per request (``stats.accepted_by_rid``)."""
+        tallied globally and per request (``stats.accepted_by_rid``).
+        Under ``dynamic_spec_k`` each slot's window is sized from its
+        request's acceptance history before the round runs."""
         K = self.backend.spec_k
-        self._state, tokens, n_acc, n_emit, alive = \
-            self.backend.sched_spec_step(self._state)
+        if self.dynamic_spec_k:
+            window = [self._spec_window(req, K) if req is not None else K
+                      for req in self.slots]
+            self._state, tokens, n_acc, n_emit, alive = \
+                self.backend.sched_spec_step(self._state, window)
+        else:
+            window = [K] * self.B
+            self._state, tokens, n_acc, n_emit, alive = \
+                self.backend.sched_spec_step(self._state)
         self.stats.spec_rounds += 1
         finished: list[Request] = []
         for slot, req in enumerate(self.slots):
             if req is None:
                 continue
+            w = window[slot]
             accepted = max(int(n_acc[slot]) - 1, 0)
-            self.stats.drafted_tokens += K - 1
+            self.stats.drafted_tokens += w - 1
             self.stats.accepted_drafted_tokens += accepted
             self.stats.accepted_by_rid[req.rid] = \
                 self.stats.accepted_by_rid.get(req.rid, 0) + accepted
+            if self.dynamic_spec_k:
+                self.stats.spec_window_by_rid[req.rid] = w
+                frac = accepted / (w - 1)
+                a = self.spec_acc_ewma
+                self._acc_ewma[req.rid] = \
+                    a * frac + (1.0 - a) * self._acc_ewma.get(req.rid, 1.0)
             cb = req.on_token or self.on_token
             for j in range(int(n_emit[slot])):
                 tok = int(tokens[slot, j])
@@ -378,6 +453,7 @@ class ContinuousScheduler:
             if not bool(alive[slot]):
                 req.done = True
                 self.slots[slot] = None
+                self._acc_ewma.pop(req.rid, None)
                 self.completed.append(req)
                 self.stats.completed += 1
                 finished.append(req)

@@ -71,6 +71,9 @@ class FakeSpecBackend:
     scheduler that reads past ``n_emit`` emits poison and fails the stream
     equality checks."""
 
+    #: sched_spec_step accepts the optional per-slot window argument
+    spec_window_aware = True
+
     def __init__(self, batch_size: int, spec_k: int = 3, accept=None):
         self.batch_size = batch_size
         self.spec_k = spec_k
@@ -79,6 +82,9 @@ class FakeSpecBackend:
         self.rounds = 0
         self.drafted = 0
         self.accepted = 0
+        #: rid → list of draft windows the scheduler asked for (dynamic
+        #: spec_k assertions)
+        self.windows_seen: dict[int, list[int]] = {}
 
     def sched_start(self):
         return [None] * self.batch_size
@@ -94,8 +100,10 @@ class FakeSpecBackend:
         raise AssertionError("speculative backend: the scheduler must route "
                              "through sched_spec_step, not sched_step")
 
-    def sched_spec_step(self, state):
+    def sched_spec_step(self, state, window=None):
         B, K = self.batch_size, self.spec_k
+        win = [K] * B if window is None else [int(w) for w in window]
+        assert all(2 <= w <= K for w in win), win
         tokens = np.full((B, K), -7, np.int64)  # poison past the window
         n_acc = np.zeros(B, np.int64)
         n_emit = np.zeros(B, np.int64)
@@ -105,18 +113,22 @@ class FakeSpecBackend:
             if s is None:
                 continue
             req, t = s["req"], s["emitted"]
+            self.windows_seen.setdefault(req.rid, []).append(win[b])
             remaining = req.max_new_tokens - t
-            window = req._script[t:t + K]
-            tokens[b, :len(window)] = window
-            acc = self.accept(self.rounds, b)
+            window_toks = req._script[t:t + K]
+            tokens[b, :len(window_toks)] = window_toks
+            # the draft window caps the accepted prefix (the engine rejects
+            # everything past it)
+            acc = min(self.accept(self.rounds, b), win[b])
             assert 1 <= acc <= K
-            self.drafted += K - 1
+            self.drafted += win[b] - 1
             self.accepted += acc - 1
             # the engine's on-device masking: emit through the first stop in
             # the accepted window, never past the budget
             stop_at = K
-            for j in range(min(acc, len(window))):
-                if req.stop_token is not None and window[j] == req.stop_token:
+            for j in range(min(acc, len(window_toks))):
+                if req.stop_token is not None and \
+                        window_toks[j] == req.stop_token:
                     stop_at = j
                     break
             emit = min(acc, stop_at + 1, remaining)
@@ -294,6 +306,84 @@ def test_admission_only_steps_are_counted():
     assert sched.stats.steps == 1
     assert sched.stats.admission_steps == 1
     assert sched.stats.decode_steps == 0
+
+
+def test_queue_wait_recorded_per_rid_under_pure_fifo():
+    """Every admitted request gets a queue-wait entry keyed on its rid,
+    including under pure FIFO admission on an atomic backend (the per-tenant
+    analysis joins on this map — a gap here silently reports zero waits).
+    An injected virtual clock makes the waits exact."""
+    now = [0.0]
+    backend = FakeBackend(1)  # atomic admission, no prefix_match_len
+    sched = ContinuousScheduler(backend, cache_affinity=False,
+                                clock=lambda: now[0])
+    reqs = []
+    for i in range(3):
+        r = Request(prompt=[1], max_new_tokens=2)
+        r._script = [i * 10, i * 10 + 1]
+        reqs.append(r)
+        sched.submit(r)
+    # B=1: request i waits while 0..i-1 run (2 steps each); tick the clock
+    # one unit per scheduler step
+    while sched.pending:
+        sched.step()
+        now[0] += 1.0
+    waits = sched.stats.queue_wait_by_rid
+    assert set(waits) == {r.rid for r in reqs}, "a FIFO admission went "\
+        "unrecorded"
+    assert len(sched.stats.queue_wait_s) == len(reqs)
+    # admission happens at the START of the step that seats the request:
+    # req0 at t=0, req1 after 2 decode steps (t=2), req2 at t=4
+    assert [waits[r.rid] for r in reqs] == [0.0, 2.0, 4.0]
+
+
+def test_dynamic_spec_k_shrinks_low_acceptance_window():
+    """Dynamic spec_k (ROADMAP speculative follow-on (c)): a request whose
+    drafts keep getting rejected must shrink its window to the floor (2)
+    while a fully-accepted co-batched request keeps the full spec_k.  The
+    accept function keys on slot: slot 0 always accepts only the free
+    token, slot 1 accepts everything the window allows."""
+    K = 5
+    backend = FakeSpecBackend(2, spec_k=K,
+                              accept=lambda rnd, b: 1 if b == 0 else K)
+    low = Request(prompt=[1], max_new_tokens=12)
+    low._script = list(range(100, 120))
+    high = Request(prompt=[1], max_new_tokens=12)
+    high._script = list(range(200, 220))
+    sched = ContinuousScheduler(backend, dynamic_spec_k=True)
+    sched.submit(low)
+    sched.submit(high)
+    sched.run(max_steps=100)
+    assert low.out == list(range(100, 112))
+    assert high.out == list(range(200, 212))
+    lw, hw = backend.windows_seen[low.rid], backend.windows_seen[high.rid]
+    # both start optimistic at the full window...
+    assert lw[0] == K and hw[0] == K
+    # ...the rejected request decays to the floor and stays there...
+    assert lw[-1] == 2 and min(lw) == 2
+    assert all(a >= b for a, b in zip(lw, lw[1:])), \
+        f"low-acceptance window must shrink monotonically, got {lw}"
+    # ...while the fully-accepted one never leaves the full window
+    assert all(w == K for w in hw), hw
+    # drafted-token accounting charges the shrunken window, not spec_k
+    assert sched.stats.drafted_tokens == backend.drafted
+    assert sched.stats.drafted_tokens < sched.stats.spec_rounds * 2 * (K - 1)
+    assert sched.stats.spec_window_by_rid[low.rid] == 2
+    assert sched.stats.spec_window_by_rid[high.rid] == K
+
+
+def test_dynamic_spec_k_rejects_window_unaware_backend():
+    """Enabling dynamic_spec_k on a speculative backend that cannot take
+    per-slot windows must fail loudly at construction, not silently run
+    fixed-K."""
+
+    class NoWindow(FakeSpecBackend):
+        spec_window_aware = False
+
+    with pytest.raises(ValueError, match="spec_window_aware"):
+        ContinuousScheduler(NoWindow(2, spec_k=3), dynamic_spec_k=True)
+    # non-speculative backends ignore the flag entirely
+    ContinuousScheduler(FakeBackend(2), dynamic_spec_k=True)
 
 
 # ---------------------------------------------------------------------------

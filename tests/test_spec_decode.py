@@ -260,6 +260,66 @@ def test_spec_composes_with_prefix_cache(key):
     assert spec_eng.prefix_store.stats.hit_blocks > 0  # reuse actually fired
 
 
+def test_dynamic_spec_k_stream_byte_identical(key):
+    """Dynamic draft windows on the REAL engine: the low-acceptance
+    mismatched draft forces windows to shrink, yet the emitted streams must
+    still equal the non-speculative baseline byte for byte — window capping
+    only rejects candidates earlier, it can never change which tokens the
+    canonical greedy path emits.  Also checks the windows genuinely moved
+    (spec_window_by_rid reached below the full spec_k) and that the charged
+    draft count shrank accordingly."""
+    base_eng, spec_eng = _byte_identity_engines(key)
+    base, _ = _serve(base_eng, _pinned_requests())
+    sched = ContinuousScheduler(spec_eng, dynamic_spec_k=True)
+    reqs = _pinned_requests()
+    for r in reqs:
+        sched.submit(r)
+    sched.run(max_steps=500)
+    stats = sched.stats
+    assert [list(r.out) for r in reqs] == base
+    assert stats.spec_rounds > 0
+    assert stats.spec_window_by_rid, "dynamic windows never recorded"
+    assert all(2 <= w <= 4 for w in stats.spec_window_by_rid.values())
+    # the mismatched draft rejects most candidates, so some request must
+    # have shrunk below the full window...
+    assert min(stats.spec_window_by_rid.values()) < 4
+    # ...and the accounting charges the shrunken windows, not K - 1 per
+    # slot per round (strictly fewer drafts than the fixed-K run would)
+    assert stats.drafted_tokens < stats.spec_rounds * 2 * 3
+
+
+def test_spec_window_caps_acceptance(key):
+    """sched_spec_step(window=...): a window of 2 everywhere bounds n_acc
+    by 2 even where the full-K round would accept more (twin draft: 100%
+    acceptance), and window=spec_k reproduces the unwindowed round."""
+    cfg = _dense_cfg()
+    p = quantize_for_serving(init_params(cfg, key), cfg)
+
+    def mk():
+        return DecodeEngine(p, cfg, batch_size=2, max_len=48,
+                            prefill_chunk=8, matmul_policy="fixed:ref",
+                            draft=(p, cfg), spec_k=4)
+
+    def admit(eng):
+        state = eng.sched_start()
+        for slot in range(2):
+            state = eng.sched_admit(state, slot, Request(
+                prompt=[7 + slot, 13 + slot, 5], max_new_tokens=12))
+        return state
+
+    eng = mk()
+    _, _, full_acc, _, _ = eng.sched_spec_step(admit(eng))
+    assert list(full_acc) == [4, 4]  # twin draft: full window accepted
+    eng2 = mk()
+    _, _, capped, _, _ = eng2.sched_spec_step(admit(eng2), window=[2, 3])
+    assert list(capped) == [2, 3], "window must cap the accepted prefix"
+    eng3 = mk()
+    _, _, explicit, _, _ = eng3.sched_spec_step(admit(eng3), window=[4, 4])
+    assert list(explicit) == list(full_acc)
+    with pytest.raises(ValueError, match="window"):
+        eng3.sched_spec_step(eng3.sched_start(), window=[2])
+
+
 def test_spec_per_request_acceptance_accounting(key):
     """stats.accepted_by_rid: keyed on stable Request.rid, one entry per
     admitted request, values summing to the global accepted count."""

@@ -1,0 +1,416 @@
+"""Workload subsystem: trace determinism (property), percentile estimator
+vs numpy, the virtual-clock admission invariant, load-generator replay
+determinism, SLO analysis, saturation sweep, schema checks, and a small
+real-engine scenario smoke."""
+
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.engine import Request
+from repro.serving.loadgen import (LoadGenerator, generate_trace,
+                                   latency_summary, percentile)
+from repro.serving.workload import (SCENARIOS, ArrivalProcess, Dist,
+                                    Scenario, TenantSpec, get_scenario)
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks"))
+import analysis  # noqa: E402
+
+from test_serving_scheduler import FakeBackend  # noqa: E402
+
+
+def _fake_backend(batch=4):
+    """FakeBackend replays ``req._script``; workload requests carry no
+    script, so wrap admission to synthesize one of the right length."""
+    backend = FakeBackend(batch)
+    orig = backend.sched_admit
+
+    def admit(state, slot, req):
+        if not hasattr(req, "_script"):
+            req._script = [17] * req.max_new_tokens
+        return orig(state, slot, req)
+
+    backend.sched_admit = admit
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# trace generation
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(sorted(SCENARIOS)), st.integers(0, 10_000),
+       st.booleans())
+def test_trace_byte_identical_for_same_seed(name, seed, smoke):
+    """Same (scenario, vocab, seed) ⇒ byte-identical arrival trace; a
+    different seed moves it.  Serialized through repr so float timestamps
+    compare exactly, not approximately."""
+    sc = get_scenario(name)
+    if smoke:
+        sc = sc.smoke()
+    a = generate_trace(sc, 512, seed)
+    b = generate_trace(sc, 512, seed)
+    assert repr(a) == repr(b)
+    c = generate_trace(sc, 512, seed + 1)
+    assert repr(a) != repr(c)
+
+
+def test_trace_shape_and_ordering():
+    sc = get_scenario("chat").smoke()
+    tr = generate_trace(sc, 512, seed=3)
+    assert 0 < len(tr) <= sc.max_requests
+    assert all(tr[i].t <= tr[i + 1].t for i in range(len(tr) - 1))
+    names = {t.name for t in sc.tenants}
+    assert {e.tenant for e in tr} <= names
+    for e in tr:
+        assert e.t > 0 and e.new_tokens >= 1 and len(e.prompt) >= 1
+        assert all(2 <= t < 512 for t in e.prompt)
+        ten = {t.name: t for t in sc.tenants}[e.tenant]
+        assert len(e.prompt) <= ten.max_prompt_len()
+
+
+def test_trace_tenant_streams_independent():
+    """Dropping one tenant must not perturb the other tenant's draws (the
+    SeedSequence-per-tenant contract)."""
+    sc = get_scenario("chat").smoke()
+    solo = Scenario(name=sc.name, description="", tenants=(sc.tenants[0],),
+                    duration_s=sc.duration_s, max_requests=sc.max_requests)
+    both = [e for e in generate_trace(sc, 512, 0) if e.tenant ==
+            sc.tenants[0].name]
+    alone = generate_trace(solo, 512, 0)
+    # the solo run keeps every event (no cross-tenant truncation), so
+    # compare the common prefix
+    n = min(len(both), len(alone))
+    assert n > 0
+    assert repr(both[:n]) == repr(alone[:n])
+
+
+def test_shared_prefix_structure():
+    """Tenants with shared_prefix_len draw from exactly prefix_groups
+    distinct prefixes; prefixes are stable across seeds' token draws only
+    via the trace seed."""
+    sc = get_scenario("rag").smoke()
+    ten = sc.tenants[0]  # the RAG tenant has prefix_groups=8
+    assert ten.shared_prefix_len > 0
+    tr = [e for e in generate_trace(sc, 512, 5) if e.tenant == ten.name]
+    heads = {e.prompt[:ten.shared_prefix_len] for e in tr}
+    assert 1 <= len(heads) <= ten.prefix_groups
+
+
+def test_dist_bounds_and_smoke_shrink():
+    rng = np.random.default_rng(0)
+    for d in (Dist("fixed", 7), Dist("uniform", 3, 9),
+              Dist("lognormal", 20, 64, sigma=0.8),
+              Dist("choice", choices=(4, 8, 12))):
+        for _ in range(200):
+            v = d.sample(rng)
+            assert 1 <= v <= d.upper()
+        s = d.shrunk(8, lo=2)
+        assert s.upper() <= max(d.upper() // 8, 2)
+    with pytest.raises(ValueError):
+        Dist("uniform", 9, 3)
+    with pytest.raises(ValueError):
+        Dist("nope")
+
+
+def test_arrival_process_rates():
+    """Mean inter-arrival gaps track 1/rate for every process kind."""
+    rng = np.random.default_rng(0)
+    for ap in (ArrivalProcess("poisson", 4.0),
+               ArrivalProcess("gamma_burst", 4.0, cv=3.0),
+               ArrivalProcess("fixed", 4.0)):
+        gaps = [ap.next_gap(rng) for _ in range(4000)]
+        assert np.mean(gaps) == pytest.approx(0.25, rel=0.1)
+    assert ArrivalProcess("poisson", 2.0).scaled(3.0).rate == 6.0
+    with pytest.raises(ValueError):
+        ArrivalProcess("poisson", 0.0)
+
+
+def test_scenario_scaled_and_smoke():
+    sc = get_scenario("agentic")
+    assert sc.scaled(2.0).offered_qps() == pytest.approx(
+        2.0 * sc.offered_qps())
+    sm = sc.smoke()
+    assert sm.max_prompt_len() < sc.max_prompt_len()
+    assert sm.duration_s < sc.duration_s
+    # SLOs survive the shrink untouched
+    assert [t.slo_ttft_s for t in sm.tenants] == \
+        [t.slo_ttft_s for t in sc.tenants]
+    with pytest.raises(KeyError):
+        get_scenario("nope")
+
+
+# ---------------------------------------------------------------------------
+# percentile estimator
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 200), st.integers(0, 10_000))
+def test_percentile_matches_numpy(n, seed):
+    """The hand-written linear-interpolation estimator must agree with
+    numpy.percentile (its default method) to float precision."""
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(0.0, 10.0, size=n).tolist()
+    for p in (0, 1, 25, 50, 75, 95, 99, 99.9, 100):
+        assert percentile(vals, p) == pytest.approx(
+            float(np.percentile(vals, p)), abs=1e-9)
+
+
+def test_percentile_edges():
+    assert percentile([], 99) == 0.0
+    assert percentile([3.0], 50) == 3.0
+    with pytest.raises(ValueError):
+        percentile([1.0], 101)
+    s = latency_summary([])
+    assert s == {"mean": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0, "max": 0.0}
+    s = latency_summary([2.0, 4.0])
+    assert s["mean"] == 3.0 and s["max"] == 4.0 and s["p50"] == 3.0
+
+
+# ---------------------------------------------------------------------------
+# load generator (fake backend)
+# ---------------------------------------------------------------------------
+
+
+def _run_chat(seed=0, **kw):
+    sc = get_scenario("chat").smoke()
+    tr = generate_trace(sc, 512, seed)
+    gen = LoadGenerator(_fake_backend(), tr, clock="virtual",
+                        cache_affinity=False, **kw)
+    return sc, gen.run()
+
+
+def test_virtual_clock_admission_invariant():
+    """No request may be admitted (or even submitted) before its arrival
+    time — the whole point of the admission shim."""
+    _, res = _run_chat()
+    assert res.records
+    for r in res.records:
+        assert r.t_submit >= r.t_arrival - 1e-12
+        assert r.t_admit is not None and r.t_admit >= r.t_arrival - 1e-12
+        assert r.t_first_token is not None and r.t_first_token > r.t_admit
+        assert r.t_done is not None and r.t_done >= r.t_first_token
+        assert r.ttft_s > 0
+        assert r.queue_wait_s >= 0
+
+
+def test_loadgen_replay_deterministic():
+    """Two replays of the same trace produce identical reports, serialized
+    bytes and all — the CI diffability contract end to end."""
+    sc, res1 = _run_chat()
+    _, res2 = _run_chat()
+    r1 = analysis.scenario_report(sc, res1, 0)
+    r2 = analysis.scenario_report(sc, res2, 0)
+    assert json.dumps(r1, sort_keys=True) == json.dumps(r2, sort_keys=True)
+    # and a different seed moves the numbers
+    sc3, res3 = _run_chat(seed=1)
+    r3 = analysis.scenario_report(sc3, res3, 1)
+    assert json.dumps(r1, sort_keys=True) != json.dumps(r3, sort_keys=True)
+
+
+def test_loadgen_records_complete_and_tenant_tagged():
+    sc, res = _run_chat()
+    by = res.by_tenant()
+    assert set(by) == {t.name for t in sc.tenants}
+    assert sum(len(v) for v in by.values()) == len(res.records)
+    assert all(r.n_out == r.new_tokens_requested for r in res.records)
+    assert res.emitted_tokens == sum(r.n_out for r in res.records)
+    assert res.achieved_qps > 0 and res.offered_qps > 0
+
+
+def test_higher_step_cost_degrades_ttft():
+    """The cost model must actually flow into the metrics: a 10x slower
+    decode step must produce strictly worse tail TTFT."""
+    sc, fast = _run_chat(decode_step_cost_s=0.005)
+    _, slow = _run_chat(decode_step_cost_s=0.05)
+    p99f = percentile([r.ttft_s for r in fast.records], 99)
+    p99s = percentile([r.ttft_s for r in slow.records], 99)
+    assert p99s > p99f
+
+
+def test_loadgen_rejects_bad_args():
+    tr = generate_trace(get_scenario("chat").smoke(), 512, 0)
+    with pytest.raises(ValueError):
+        LoadGenerator(_fake_backend(), tr, clock="nope")
+    with pytest.raises(ValueError):
+        LoadGenerator(_fake_backend(), tr, decode_step_cost_s=0.0)
+    with pytest.raises(ValueError):
+        LoadGenerator(_fake_backend(), []).run()
+
+
+# ---------------------------------------------------------------------------
+# analysis: SLO report, saturation sweep, schema checks
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_report_slo_fields():
+    sc, res = _run_chat()
+    rep = analysis.scenario_report(sc, res, 0)
+    assert rep["scenario"] == sc.name and rep["clock"] == "virtual"
+    assert set(rep["tenants"]) == {t.name for t in sc.tenants}
+    for t in rep["tenants"].values():
+        assert 0.0 <= t["slo_attainment"] <= 1.0
+        assert t["goodput_qps"] >= 0.0
+        for sec in ("ttft_s", "tpot_s", "queue_wait_s"):
+            assert set(t[sec]) == {"mean", "p50", "p95", "p99", "max"}
+        assert 0 < t["ttft_s"]["p50"] <= t["ttft_s"]["p99"] \
+            <= t["ttft_s"]["max"]
+    assert 0.0 <= rep["slo_attainment"] <= 1.0
+    assert rep["ttft_trajectory"], "trajectory must not be empty"
+    assert sum(w["requests"] for w in rep["ttft_trajectory"]) == \
+        len([r for r in res.records if r.ttft_s is not None])
+
+
+def test_slo_attainment_reacts_to_thresholds():
+    """Impossible SLOs ⇒ attainment 0; infinite SLOs ⇒ attainment 1."""
+    sc, res = _run_chat()
+
+    def with_slo(ttft, tpot):
+        from dataclasses import replace
+        return replace(sc, tenants=tuple(
+            replace(t, slo_ttft_s=ttft, slo_tpot_s=tpot)
+            for t in sc.tenants))
+
+    loose = analysis.scenario_report(with_slo(1e9, 1e9), res, 0)
+    tight = analysis.scenario_report(with_slo(1e-12, 1e-12), res, 0)
+    assert loose["slo_attainment"] == 1.0
+    assert tight["slo_attainment"] == 0.0
+    assert tight["goodput_qps"] == 0.0
+
+
+def test_saturation_sweep_brackets_knee():
+    """Synthetic server with a hard knee: sweep must bracket it and report
+    max sustainable QPS inside the passing region."""
+    knee = 2.5
+    sweep = analysis.saturation_sweep(
+        lambda s: 0.05 if s <= knee else 5.0, base_qps=10.0, slo_ttft_s=1.0,
+        max_doublings=3, bisect_iters=5, log=None)
+    assert sweep["saturated"]
+    assert 2.0 <= sweep["max_sustainable_scale"] <= knee + 1e-9
+    assert sweep["max_sustainable_qps"] == pytest.approx(
+        10.0 * sweep["max_sustainable_scale"])
+    assert any(not p["ok"] for p in sweep["probes"])
+
+
+def test_saturation_sweep_never_failing_is_lower_bound():
+    sweep = analysis.saturation_sweep(lambda s: 0.0, base_qps=4.0,
+                                      slo_ttft_s=1.0, max_doublings=2,
+                                      bisect_iters=3, log=None)
+    assert not sweep["saturated"]
+    assert sweep["max_sustainable_scale"] == 4.0  # 1 → 2 → 4, all pass
+
+
+def test_saturation_sweep_fails_at_base_rate():
+    sweep = analysis.saturation_sweep(lambda s: 9.0, base_qps=4.0,
+                                      slo_ttft_s=1.0, log=None)
+    assert sweep["saturated"] and sweep["max_sustainable_qps"] == 0.0
+
+
+def _minimal_v5_scenario_results():
+    sc, res = _run_chat()
+    path = {"tokens": 1, "seconds": 1.0, "tok_s": 1.0,
+            "ttft_s": latency_summary([0.1]), "tpot_s": latency_summary([0.1])}
+    return {"schema_version": 5, "arch": "x", "batch": 4, "mode": "scenario",
+            "seed": 0, "request_mix": {},
+            "generational": dict(path),
+            "continuous": dict(path, queue_wait_s={}),
+            "speedup": 1.0, "prefix": {"enabled": False},
+            "speculative": {"enabled": False},
+            "workload": analysis.scenario_report(sc, res, 0),
+            "saturation": None}
+
+
+def test_check_schema_v5_scenario_roundtrip():
+    r = _minimal_v5_scenario_results()
+    assert analysis.check_schema(r) == 5
+    # the checker localizes what went missing
+    del r["workload"]["tenants"]["interactive"]["ttft_s"]
+    with pytest.raises(AssertionError, match="interactive"):
+        analysis.check_schema(r)
+    r2 = _minimal_v5_scenario_results()
+    r2["workload"]["slo_attainment"] = 1.5
+    with pytest.raises(AssertionError, match="slo_attainment"):
+        analysis.check_schema(r2)
+    r3 = _minimal_v5_scenario_results()
+    r3["mode"] = "nope"
+    with pytest.raises(AssertionError, match="mode"):
+        analysis.check_schema(r3)
+
+
+def test_check_schema_accepts_committed_bench_file():
+    """The repo's committed BENCH_serving.json must always satisfy its own
+    declared schema — this is the one-place back-compat check CI also runs."""
+    bench = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_serving.json")
+    with open(bench) as f:
+        results = json.load(f)
+    assert analysis.check_schema(results) >= 2
+
+
+def test_check_schema_v2_minimal():
+    base = {"tokens": 1, "seconds": 1.0, "tok_s": 1.0,
+            "ttft_s": {"mean": 0.1, "p50": 0.1, "max": 0.1}}
+    r = {"schema_version": 2, "arch": "x", "batch": 4,
+         "generational": base, "continuous": base, "speedup": 1.0}
+    assert analysis.check_schema(r) == 2
+    with pytest.raises(AssertionError, match="schema_version"):
+        analysis.check_schema({})
+    with pytest.raises(AssertionError):
+        analysis.check_schema(dict(r, schema_version=9))
+
+
+def test_diff_benches_reports_deltas():
+    old = _minimal_v5_scenario_results()
+    new = json.loads(json.dumps(old))
+    new["continuous"]["tok_s"] = 2.0
+    lines = analysis.diff_benches(old, new, log=lambda s: None)
+    assert any("continuous.tok_s" in ln for ln in lines)
+    same = analysis.diff_benches(old, old, log=lambda s: None)
+    assert same == ["  no tracked metric changed"]
+
+
+# ---------------------------------------------------------------------------
+# real engine smoke
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_replay_on_real_engine(key):
+    """A truncated chat smoke scenario through a real DecodeEngine under the
+    virtual clock: every record completes, per-tenant percentiles are
+    nonzero, and two replays on the same engine serialize identically."""
+    import jax
+
+    from repro.configs.registry import get_smoke_config
+    from repro.models.decode import quantize_for_serving
+    from repro.models.model import init_params
+    from repro.serving.engine import DecodeEngine
+
+    cfg = get_smoke_config("bitnet-b1.58-2b").with_(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=256, loss_chunk=32)
+    sc = get_scenario("chat").smoke()
+    trace = generate_trace(sc, cfg.vocab_size, seed=0)[:6]
+    max_len = max(len(e.prompt) + e.new_tokens for e in trace) + 1
+    sp = quantize_for_serving(init_params(cfg, jax.random.PRNGKey(0)), cfg)
+    engine = DecodeEngine(sp, cfg, batch_size=2, max_len=max_len,
+                          prefill_chunk=16, matmul_policy="fixed:ref")
+
+    def replay():
+        gen = LoadGenerator(engine, trace, clock="virtual")
+        return analysis.scenario_report(sc, gen.run(), 0)
+
+    rep1, rep2 = replay(), replay()
+    assert json.dumps(rep1, sort_keys=True) == json.dumps(rep2,
+                                                          sort_keys=True)
+    assert rep1["completed"] == len(trace)
+    for t in rep1["tenants"].values():
+        if t["requests"]:
+            assert t["ttft_s"]["p50"] > 0
+            assert 0.0 <= t["slo_attainment"] <= 1.0
